@@ -1,0 +1,50 @@
+"""Paper §V.A consensus-cost claim: CCM = P*Q vs broadcast = (P+Q)^2,
+plus a measured microbenchmark of the batched P x Q validation matrix
+(the actual compute realization of the cost model).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, time_us
+from repro.core.consensus import consensus_cost
+from repro.fl.adapter import femnist_adapter
+from repro.fl.client import make_score_matrix_fn
+
+
+def run(full: bool = False):
+    from repro.core.pbft import round_messages
+
+    print("# consensus cost model: active nodes split P trainers / Q committee")
+    print("active,P,Q,ccm_PQ,broadcast_(P+Q)^2,ratio,"
+          "ccm+committee_pbft,network_pbft,pbft_ratio")
+    for active in (50, 90, 200, 450, 900):
+        q = int(active * 0.4)
+        p = active - q
+        ccm, bc = consensus_cost(p, q)
+        m = round_messages(p, q, k=max(1, p // 2))
+        print(f"{active},{p},{q},{ccm},{bc},{bc/ccm:.1f},"
+              f"{m.total_ccm},{m.network_pbft},"
+              f"{m.network_pbft/max(m.total_ccm,1):.1f}")
+
+    # measured: the vmapped P x Q validation matrix on CPU
+    adapter = femnist_adapter(width=8)
+    params = adapter.init(jax.random.PRNGKey(0))
+    score = make_score_matrix_fn(adapter)
+    P, Q, vb = (16, 8, 32) if not full else (54, 36, 64)
+    updates = jax.tree.map(
+        lambda x: 0.01 * jax.random.normal(
+            jax.random.PRNGKey(1), (P,) + x.shape, x.dtype
+        ),
+        params,
+    )
+    vx = jax.random.normal(jax.random.PRNGKey(2), (Q, vb, 28, 28, 1))
+    vy = jax.random.randint(jax.random.PRNGKey(3), (Q, vb), 0, 62)
+    us = time_us(lambda: score(params, updates, vx, vy), iters=3)
+    emit("consensus_validation_matrix", us,
+         f"P={P};Q={Q};per_validation_us={us/(P*Q):.1f}")
+
+
+if __name__ == "__main__":
+    run(full=True)

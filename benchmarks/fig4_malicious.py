@@ -1,0 +1,82 @@
+"""Paper Fig. 4: global-model accuracy under collusive Gaussian-noise attacks
+at increasing malicious proportions — BFLC vs Basic FL (FedAvg) vs CwMed.
+
+Paper setting: 10% active nodes, 20% of them elected committee; malicious
+committee members give random high scores (0.9-1.0) to malicious updates.
+Reproduced claim: BFLC tolerates a much higher malicious fraction.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.data import make_femnist_like
+from repro.fl import BFLCConfig, BFLCRuntime, FLConfig, FLTrainer, femnist_adapter
+
+
+def run(full: bool = False):
+    clients = 120 if full else 60
+    rounds = 50 if full else 12
+    fracs = (0.0, 0.1, 0.2, 0.3, 0.4, 0.5) if full else (0.0, 0.2, 0.4)
+    ds = make_femnist_like(
+        num_clients=clients, mean_samples=80, test_size=1200 if full else 600,
+        seed=1,
+    )
+    adapter = femnist_adapter(width=16)
+    t0 = time.time()
+    # Warm start: committee validation discriminates only once honest scores
+    # separate from poisoned ones (the paper's Fig. 4 operates on converging
+    # models; the cold-start window is a vulnerability we report separately
+    # in EXPERIMENTS.md).
+    from repro.fl.baselines import train_standalone
+
+    warm, _ = train_standalone(adapter, ds, steps=250, batch=64, lr=0.05,
+                               eval_every=10**6)
+
+    print("# Fig4: accuracy under collusive gaussian attack")
+    print("framework," + ",".join(f"{f:.0%}" for f in fracs))
+    rows = {"BFLC": [], "BasicFL": [], "CwMed": []}
+    packed_mal = []
+    for frac in fracs:
+        # paper: 10% of 900 active, 20% committee -> q=18.  At reduced client
+        # counts the same FRACTIONS give q=2, where median scoring is not
+        # robust (one colluder controls it) — keep the committee >= 5 so the
+        # scaled run preserves the paper's q >> 2 regime.
+        cfg = BFLCConfig(
+            active_proportion=0.25, committee_fraction=0.35,
+            k_updates=max(3, int(clients * 0.25 * 0.5)),
+            local_steps=20, local_batch=32, malicious_fraction=frac,
+            attack="gaussian", attack_sigma=1.0, collusion=True, seed=0,
+        )
+        rt = BFLCRuntime(adapter, ds, cfg, initial_params=warm)
+        rt.run(rounds, eval_every=rounds)
+        rows["BFLC"].append(rt.logs[-1].test_accuracy)
+        packed_mal.append(
+            sum(l.packed_malicious for l in rt.logs)
+            / (cfg.k_updates * rounds)
+        )
+
+        for name, agg in (("BasicFL", "fedavg"), ("CwMed", "cwmed")):
+            fl = FLTrainer(adapter, ds, FLConfig(
+                active_proportion=0.2, local_steps=20, local_batch=32,
+                aggregation=agg, malicious_fraction=frac,
+                attack="gaussian", attack_sigma=1.0, seed=0,
+            ), initial_params=warm)
+            fl.run(rounds, eval_every=rounds)
+            rows[name].append(fl.accuracies[-1])
+
+    for name, vals in rows.items():
+        print(f"{name}," + ",".join(f"{v:.4f}" for v in vals))
+    print("BFLC_packed_malicious_rate," +
+          ",".join(f"{v:.3f}" for v in packed_mal))
+    dt = (time.time() - t0) * 1e6
+    emit("fig4_malicious", dt / max(len(fracs), 1),
+         f"bflc_at_max_frac={rows['BFLC'][-1]:.3f};"
+         f"fedavg_at_max_frac={rows['BasicFL'][-1]:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(full=True)

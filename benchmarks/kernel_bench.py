@@ -1,0 +1,33 @@
+"""Pallas kernel microbenchmarks (interpret mode on CPU: correctness-scale
+numbers; the BlockSpec tiling is the TPU deliverable)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_us
+from repro.kernels import ops, ref
+
+
+def run(full: bool = False):
+    sizes = [(8, 1 << 16), (16, 1 << 18)] if full else [(8, 1 << 14)]
+    for K, D in sizes:
+        stack = jax.random.normal(jax.random.PRNGKey(0), (K, D), jnp.float32)
+        w = jnp.full((K,), 1.0 / K)
+        x = stack[0]
+
+        us = time_us(lambda: ops.fedavg_agg(stack, w), iters=3)
+        us_ref = time_us(lambda: ref.fedavg_agg_ref(stack, w), iters=3)
+        emit(f"fedavg_agg_K{K}_D{D}", us, f"ref_us={us_ref:.1f}")
+
+        us = time_us(lambda: ops.cwmed(stack), iters=3)
+        us_ref = time_us(lambda: ref.cwmed_ref(stack), iters=3)
+        emit(f"cwmed_K{K}_D{D}", us, f"ref_us={us_ref:.1f}")
+
+        us = time_us(lambda: ops.quantize(x), iters=3)
+        emit(f"quantize_D{D}", us,
+             f"bytes_saved={(x.nbytes - D - 4*(D//2048))/x.nbytes:.2f}")
+
+
+if __name__ == "__main__":
+    run(full=True)

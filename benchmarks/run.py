@@ -1,0 +1,60 @@
+"""Benchmark harness entry: one function per paper table/figure + systems
+benchmarks.  Prints ``name,us_per_call,derived`` CSV lines.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    committee_ablation,
+    consensus_cost,
+    fig3_attack_probability,
+    fig4_malicious,
+    kernel_bench,
+    roofline,
+    storage_opt,
+    table1_accuracy,
+)
+
+ALL = {
+    "fig3_attack_probability": fig3_attack_probability.run,
+    "consensus_cost": consensus_cost.run,
+    "kernel_bench": kernel_bench.run,
+    "storage_opt": storage_opt.run,
+    "table1_accuracy": table1_accuracy.run,
+    "fig4_malicious": fig4_malicious.run,
+    "committee_ablation": committee_ablation.run,
+    "roofline": roofline.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sweeps (slow)")
+    ap.add_argument("--only", default=None, choices=list(ALL))
+    args = ap.parse_args()
+
+    names = [args.only] if args.only else list(ALL)
+    failures = 0
+    for name in names:
+        print(f"\n=== {name} ===")
+        t0 = time.time()
+        try:
+            ALL[name](full=args.full)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},0.0,FAILED")
+        print(f"# {name} took {time.time()-t0:.1f}s")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""§IV.D storage optimization: chain bytes with/without pruning and with the
+int8 update codec (beyond-paper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_us
+from repro.core.blockchain import Chain
+from repro.kernels.ops import quantize_pytree
+
+
+def run(full: bool = False):
+    D = 1 << 18 if full else 1 << 14
+    model = {"w": jnp.zeros((D,), jnp.float32)}
+    upd = {"w": 0.01 * jax.random.normal(jax.random.PRNGKey(0), (D,))}
+    rounds, k = (10, 8) if full else (4, 4)
+
+    def build(quantized: bool, prune: bool) -> int:
+        chain = Chain(k)
+        chain.append_model(model, 0)
+        for t in range(rounds):
+            for i in range(k):
+                payload = quantize_pytree(upd)[0] if quantized else upd
+                chain.append_update(payload, i, 0.9)
+            chain.append_model(model, t + 1)
+            if prune:
+                chain.prune(keep_rounds=1)
+        return chain.storage_bytes()
+
+    base = build(False, False)
+    pruned = build(False, True)
+    quant = build(True, False)
+    both = build(True, True)
+    print("# chain storage bytes (rounds={}, k={}, D={})".format(rounds, k, D))
+    print(f"full,{base}")
+    print(f"pruned,{pruned} ({base/pruned:.1f}x)")
+    print(f"quantized,{quant} ({base/quant:.1f}x)")
+    print(f"pruned+quantized,{both} ({base/both:.1f}x)")
+    emit("storage_opt", 0.0,
+         f"prune_x={base/pruned:.1f};quant_x={base/quant:.1f};"
+         f"both_x={base/both:.1f}")
+
+
+if __name__ == "__main__":
+    run(full=True)

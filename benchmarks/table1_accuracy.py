@@ -1,0 +1,68 @@
+"""Paper Table I: accuracy of BFLC / Basic FL / stand-alone vs active-node
+proportion k% on the FEMNIST-like federated dataset.
+
+Scaled to this container by default (fewer clients/rounds than the paper's
+900 clients); pass full=True for a closer-to-paper sweep.  The paper's
+qualitative claims this reproduces: (1) BFLC ~ Basic FL at every k, (2) both
+slightly below stand-alone, (3) accuracy roughly flat in k.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.data import make_femnist_like
+from repro.fl import (
+    BFLCConfig, BFLCRuntime, FLConfig, FLTrainer, femnist_adapter,
+    train_standalone,
+)
+
+
+def run(full: bool = False):
+    clients = 150 if full else 60
+    rounds = 60 if full else 12
+    props = (0.1, 0.2, 0.3, 0.4, 0.5) if full else (0.1, 0.3, 0.5)
+    ds = make_femnist_like(
+        num_clients=clients, mean_samples=80, test_size=1500 if full else 600,
+        seed=1,
+    )
+    adapter = femnist_adapter(width=16)
+
+    t0 = time.time()
+    _, accs = train_standalone(
+        adapter, ds, steps=rounds * 20, batch=64, lr=0.05,
+        eval_every=max(rounds * 10, 1),
+    )
+    standalone = accs[-1]
+
+    print("# Table1: accuracy vs active-node proportion")
+    print("framework," + ",".join(f"{p:.0%}" for p in props))
+    rows = {"BFLC": [], "BasicFL": []}
+    for prop in props:
+        cfg = BFLCConfig(active_proportion=prop, committee_fraction=0.4,
+                         k_updates=max(3, int(clients * prop * 0.4)),
+                         local_steps=20, local_batch=32, seed=0)
+        rt = BFLCRuntime(adapter, ds, cfg)
+        rt.run(rounds, eval_every=rounds)
+        rows["BFLC"].append(rt.logs[-1].test_accuracy)
+        assert rt.chain.verify()
+
+        fl = FLTrainer(adapter, ds, FLConfig(
+            active_proportion=prop, local_steps=20, local_batch=32, seed=0))
+        fl.run(rounds, eval_every=rounds)
+        rows["BasicFL"].append(fl.accuracies[-1])
+
+    for name, vals in rows.items():
+        print(f"{name}," + ",".join(f"{v:.4f}" for v in vals))
+    print(f"Stand-alone," + ",".join(f"{standalone:.4f}" for _ in props))
+    dt = (time.time() - t0) * 1e6
+    gap = np.mean(np.abs(np.array(rows["BFLC"]) - np.array(rows["BasicFL"])))
+    emit("table1_accuracy", dt / max(len(props), 1),
+         f"standalone={standalone:.3f};mean_bflc_fedavg_gap={gap:.3f}")
+    return rows, standalone
+
+
+if __name__ == "__main__":
+    run(full=True)

@@ -1,0 +1,41 @@
+"""Fig.4-style demo: BFLC vs FedAvg vs CwMed under a collusive
+Gaussian-perturbation attack (30% malicious nodes).
+
+  PYTHONPATH=src python examples/malicious_attack.py
+"""
+from repro.data import make_femnist_like
+from repro.fl import BFLCConfig, BFLCRuntime, FLConfig, FLTrainer, femnist_adapter
+
+MAL = 0.3
+ROUNDS = 15
+
+
+def main():
+    ds = make_femnist_like(num_clients=60, mean_samples=80, test_size=800,
+                           seed=1)
+    adapter = femnist_adapter(width=16)
+
+    print(f"=== BFLC with {MAL:.0%} malicious (collusive scoring) ===")
+    cfg = BFLCConfig(active_proportion=0.3, committee_fraction=0.3,
+                     k_updates=6, local_steps=20, local_lr=0.02,
+                     malicious_fraction=MAL, attack="gaussian",
+                     attack_sigma=1.0, collusion=True, seed=0)
+    rt = BFLCRuntime(adapter, ds, cfg)
+    logs = rt.run(ROUNDS, eval_every=5)
+    packed_mal = sum(l.packed_malicious for l in logs)
+    print(f"malicious updates packed on-chain: {packed_mal} / "
+          f"{ROUNDS * cfg.k_updates}")
+    print(f"final accuracy: {logs[-1].test_accuracy:.3f}")
+
+    for name, agg in (("Basic FL (FedAvg)", "fedavg"), ("CwMed", "cwmed")):
+        print(f"\n=== {name} with {MAL:.0%} malicious ===")
+        fl = FLTrainer(adapter, ds, FLConfig(
+            active_proportion=0.3, local_steps=20, local_lr=0.02,
+            aggregation=agg, malicious_fraction=MAL, attack="gaussian",
+            attack_sigma=1.0, seed=0))
+        accs = fl.run(ROUNDS, eval_every=5)
+        print(f"final accuracy: {accs[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Batched serving demo: prefill + decode with the production decode step
+(smoke-sized gemma3: 5:1 local:global attention with ring-buffer caches).
+
+  PYTHONPATH=src python examples/serve_demo.py
+"""
+import subprocess
+import sys
+import os
+
+if __name__ == "__main__":
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ, PYTHONPATH=os.path.join(repo, "src"))
+    sys.exit(subprocess.call(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "gemma3-4b",
+         "--smoke", "--batch", "4", "--prompt-len", "64", "--gen", "16"],
+        env=env,
+    ))

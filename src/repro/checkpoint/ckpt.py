@@ -1,0 +1,83 @@
+"""msgpack pytree checkpointing (params, optimizer state, chain snapshots)."""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _encode_leaf(x):
+    arr = np.asarray(x)
+    # dtype by NAME: ml_dtypes types (bfloat16) stringify as void ('|V2')
+    # through .str and would not round-trip
+    return {
+        b"__nd": True,
+        b"dtype": arr.dtype.name.encode(),
+        b"shape": list(arr.shape),
+        b"data": arr.tobytes(),
+    }
+
+
+def _is_leaf_dict(d) -> bool:
+    return isinstance(d, dict) and d.get(b"__nd") is True
+
+
+def _decode_leaf(d):
+    import ml_dtypes  # registers bfloat16 & friends with numpy  # noqa: F401
+
+    arr = np.frombuffer(d[b"data"], dtype=np.dtype(d[b"dtype"].decode()))
+    return jnp.asarray(arr.reshape(d[b"shape"]))
+
+
+def save_pytree(path: str, tree: Any) -> None:
+    leaves, treedef = jax.tree.flatten(tree)
+    payload = {
+        b"treedef": str(treedef).encode(),
+        b"leaves": [_encode_leaf(l) for l in leaves],
+        b"structure": _structure_of(tree),
+    }
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def load_pytree(path: str, like: Any = None) -> Any:
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=True)
+    leaves = [_decode_leaf(d) for d in payload[b"leaves"]]
+    if like is not None:
+        treedef = jax.tree.structure(like)
+        return jax.tree.unflatten(treedef, leaves)
+    return _rebuild(payload[b"structure"], iter(leaves))
+
+
+def _structure_of(tree):
+    """Serializable skeleton (dicts/lists/tuples/None markers).
+
+    Dict keys are SORTED to match jax.tree.flatten leaf order."""
+    if isinstance(tree, dict):
+        return {b"__d": {str(k).encode(): _structure_of(tree[k])
+                         for k in sorted(tree)}}
+    if isinstance(tree, (list, tuple)):
+        return {b"__l": [_structure_of(v) for v in tree],
+                b"__t": isinstance(tree, tuple)}
+    if tree is None:
+        return {b"__n": True}
+    return {b"__leaf": True}
+
+
+def _rebuild(struct, leaves_iter):
+    if b"__d" in struct:
+        return {k.decode(): _rebuild(v, leaves_iter) for k, v in struct[b"__d"].items()}
+    if b"__l" in struct:
+        vals = [_rebuild(v, leaves_iter) for v in struct[b"__l"]]
+        return tuple(vals) if struct[b"__t"] else vals
+    if struct.get(b"__n"):
+        return None
+    return next(leaves_iter)

@@ -1,0 +1,76 @@
+"""The paper's own global model: a compact AlexNet-role CNN for FEMNIST.
+
+The paper trains AlexNet on FEMNIST (62-class 28x28 handwritten characters).
+AlexNet's 11x11/5x5 convs are MXU-hostile and oversized for 28x28 inputs, so
+per DESIGN.md §4 we use an equivalent-capacity 3x3 CNN filling the same role.
+Pure-JAX init/apply — this is the pytree the BFLC chain stores and the
+committee validates.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+ARCH_ID = "femnist-cnn"
+NUM_CLASSES = 62
+IMAGE_SHAPE = (28, 28, 1)
+
+
+def init_params(key, *, width: int = 32, num_classes: int = NUM_CLASSES) -> Dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+
+    def conv_init(k, shape):
+        fan_in = shape[0] * shape[1] * shape[2]
+        return jax.random.normal(k, shape) * math.sqrt(2.0 / fan_in)
+
+    def fc_init(k, shape):
+        return jax.random.normal(k, shape) * math.sqrt(2.0 / shape[0])
+
+    w = width
+    return {
+        "conv1": {"w": conv_init(k1, (3, 3, 1, w)), "b": jnp.zeros((w,))},
+        "conv2": {"w": conv_init(k2, (3, 3, w, 2 * w)), "b": jnp.zeros((2 * w,))},
+        "fc1": {"w": fc_init(k3, (7 * 7 * 2 * w, 128)), "b": jnp.zeros((128,))},
+        # zero-init output layer: calibrated logits at init (loss = ln 62),
+        # keeps early local updates small enough to average across non-IID
+        # clients (FL rounds aggregate K divergent updates)
+        "fc2": {"w": jnp.zeros((128, num_classes)), "b": jnp.zeros((num_classes,))},
+    }
+
+
+def _conv(x, p):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + p["b"]
+
+
+def _pool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def apply(params: Dict, images: jnp.ndarray) -> jnp.ndarray:
+    """images: (B, 28, 28, 1) -> logits (B, 62)."""
+    x = jax.nn.relu(_conv(images, params["conv1"]))
+    x = _pool(x)                                   # 14x14
+    x = jax.nn.relu(_conv(x, params["conv2"]))
+    x = _pool(x)                                   # 7x7
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return x @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+def loss_fn(params: Dict, images, labels) -> jnp.ndarray:
+    logits = apply(params, images)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+
+
+def accuracy(params: Dict, images, labels) -> jnp.ndarray:
+    return (apply(params, images).argmax(axis=-1) == labels).mean()

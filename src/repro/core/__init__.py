@@ -1,0 +1,22 @@
+from repro.core.blockchain import Chain, Block, LayoutError, pytree_digest
+from repro.core.consensus import CommitteeConsensus, consensus_cost
+from repro.core.election import BY_SCORE, MULTI_FACTOR, RANDOM, elect
+from repro.core.node import Node, NodeManager
+from repro.core.security import attack_success_probability, fig3_grid
+
+__all__ = [
+    "Chain",
+    "Block",
+    "LayoutError",
+    "pytree_digest",
+    "CommitteeConsensus",
+    "consensus_cost",
+    "elect",
+    "RANDOM",
+    "BY_SCORE",
+    "MULTI_FACTOR",
+    "Node",
+    "NodeManager",
+    "attack_success_probability",
+    "fig3_grid",
+]

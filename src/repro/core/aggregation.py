@@ -1,0 +1,86 @@
+"""Update aggregation strategies.
+
+* ``fedavg``      — the Basic-FL baseline (McMahan et al.) and BFLC's own
+  aggregation over committee-validated updates (weighted by sample counts or
+  scores).
+* ``cwmed``       — coordinate-wise median (Yin et al. 2018), the robust
+  baseline of Fig. 4.
+* ``trimmed_mean``— coordinate-wise trimmed mean (bonus robust baseline).
+
+All operate on *flattened* update vectors (K, D); ``aggregate_pytrees``
+adapts pytree updates.  The inner reductions dispatch to the Pallas kernels
+(repro.kernels) when ``use_kernels=True`` — kernels are validated against
+the jnp implementations here (their ref oracles import these).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+
+def flatten_updates(updates: Sequence) -> tuple:
+    """Pytree updates -> (stacked (K, D) f32 matrix, unravel fn)."""
+    flats = []
+    unravel = None
+    for u in updates:
+        f, un = ravel_pytree(u)
+        flats.append(f.astype(jnp.float32))
+        unravel = un
+    return jnp.stack(flats), unravel
+
+
+def fedavg(stack: jnp.ndarray, weights: Optional[jnp.ndarray] = None,
+           use_kernels: bool = False) -> jnp.ndarray:
+    """stack: (K, D); weights: (K,) unnormalized."""
+    K = stack.shape[0]
+    w = jnp.ones((K,), jnp.float32) if weights is None else weights.astype(jnp.float32)
+    w = w / jnp.maximum(w.sum(), 1e-12)
+    if use_kernels:
+        from repro.kernels.ops import fedavg_agg
+        return fedavg_agg(stack, w)
+    return jnp.einsum("k,kd->d", w, stack)
+
+
+def cwmed(stack: jnp.ndarray, use_kernels: bool = False) -> jnp.ndarray:
+    """Coordinate-wise median over K updates."""
+    if use_kernels:
+        from repro.kernels.ops import cwmed as cwmed_kernel
+        return cwmed_kernel(stack)
+    return jnp.median(stack, axis=0)
+
+
+def trimmed_mean(stack: jnp.ndarray, trim: int) -> jnp.ndarray:
+    """Drop the `trim` largest and smallest per coordinate, mean the rest."""
+    K = stack.shape[0]
+    if 2 * trim >= K:
+        raise ValueError("trim too large")
+    s = jnp.sort(stack, axis=0)
+    return s[trim : K - trim].mean(axis=0)
+
+
+def aggregate_pytrees(
+    updates: Sequence,
+    method: str = "fedavg",
+    weights: Optional[Sequence[float]] = None,
+    trim: int = 1,
+    use_kernels: bool = False,
+):
+    stack, unravel = flatten_updates(updates)
+    w = None if weights is None else jnp.asarray(weights)
+    if method == "fedavg":
+        agg = fedavg(stack, w, use_kernels=use_kernels)
+    elif method == "cwmed":
+        agg = cwmed(stack, use_kernels=use_kernels)
+    elif method == "trimmed_mean":
+        agg = trimmed_mean(stack, trim)
+    else:
+        raise ValueError(method)
+    return unravel(agg)
+
+
+def apply_update(params, update, scale: float = 1.0):
+    """params + scale * update (pytree add)."""
+    return jax.tree.map(lambda p, u: p + scale * u.astype(p.dtype), params, update)

@@ -1,0 +1,81 @@
+"""Malicious-node attack models (paper §IV.C, §V.B).
+
+* ``gaussian_perturbation`` — the paper's attack: pointwise Gaussian random
+  noise replacing/corrupting the honest update.
+* ``sign_flip`` / ``scaled_poison`` — extra attack modes (beyond-paper) to
+  widen the robustness evaluation.
+* ``CollusionPolicy`` — §V.B's strengthened attack: malicious committee
+  members give random high scores (0.9–1.0) to malicious updates.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import numpy as np
+
+
+def gaussian_perturbation(rng: np.random.Generator, update, sigma: float = 1.0,
+                          ref=None):
+    """Replace each coordinate with pointwise Gaussian noise.
+
+    Noise is scaled per-leaf to ``ref``'s magnitude when given (the paper's
+    regime: noise that rivals the *model*, poisoning the aggregate), else to
+    the update's own magnitude (a stealthy norm-matched variant).  Local
+    updates are tiny relative to the model, so update-scaled noise barely
+    moves the global model — the ref=params scaling is what reproduces the
+    Fig. 4 degradation."""
+    leaves, treedef = jax.tree.flatten(update)
+    ref_leaves = jax.tree.leaves(ref) if ref is not None else leaves
+    out = []
+    for leaf, rl in zip(leaves, ref_leaves):
+        arr = np.asarray(leaf)
+        scale = sigma * (np.abs(np.asarray(rl)).mean() + 1e-8)
+        out.append(rng.normal(0.0, scale, arr.shape).astype(arr.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def sign_flip(update, scale: float = 1.0):
+    return jax.tree.map(lambda x: -scale * x, update)
+
+
+def scaled_poison(rng: np.random.Generator, update, target_scale: float = 10.0):
+    """Boosted poisoning: huge step in a random direction."""
+    leaves, treedef = jax.tree.flatten(update)
+    out = []
+    for leaf in leaves:
+        arr = np.asarray(leaf)
+        direction = rng.normal(0, 1, arr.shape).astype(arr.dtype)
+        out.append(target_scale * np.abs(arr).mean() * direction)
+    return jax.tree.unflatten(treedef, out)
+
+
+@dataclass
+class CollusionPolicy:
+    """Malicious committee members' scoring behaviour (§V.B): random high
+    scores for fellow-malicious updates, honest-looking scores otherwise."""
+
+    high_lo: float = 0.9
+    high_hi: float = 1.0
+
+    def score(
+        self,
+        rng: np.random.Generator,
+        member_is_malicious: bool,
+        uploader_is_malicious: bool,
+        honest_score: float,
+    ) -> float:
+        if member_is_malicious and uploader_is_malicious:
+            return float(rng.uniform(self.high_lo, self.high_hi))
+        if member_is_malicious and not uploader_is_malicious:
+            # drag honest updates down (strongest collusion variant)
+            return float(rng.uniform(0.0, 0.1))
+        return honest_score
+
+
+ATTACKS = {
+    "gaussian": gaussian_perturbation,
+    "sign_flip": lambda rng, u, **kw: sign_flip(u, **kw),
+    "scaled": scaled_poison,
+}

@@ -1,0 +1,244 @@
+"""The BFLC on-chain storage pattern (paper §III.A, Fig. 2).
+
+Two block kinds on one alliance chain:
+
+* **model block** at height ``t * (k + 1)``   — the round-t global model;
+* **update blocks** at heights ``[t*(k+1)+1, (t+1)*(k+1)-1]`` — the k scored
+  local updates of round t.
+
+The chain enforces this layout: exactly ``k`` update blocks must follow a
+model block before the next model block may be appended.  The latest model is
+addressable in O(1) (§III.A "nodes can get the latest model quickly").
+Historical blocks exist for failure fallback & verification and can be pruned
+(§IV.D) — pruning keeps headers (so hash-chain verification still works) and
+drops payloads, or hands payloads to an off-chain store.
+
+Hashes are SHA-256 over (prev_hash, header fields, payload digest); payload
+digests cover every leaf of the stored pytree, so a tampered weight flips the
+chain — ``verify()`` catches it.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Any, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+MODEL = "model"
+UPDATE = "update"
+
+
+def pytree_digest(tree: Any) -> str:
+    h = hashlib.sha256()
+    leaves, treedef = jax.tree.flatten(tree)
+    h.update(str(treedef).encode())
+    for leaf in leaves:
+        arr = np.asarray(leaf)
+        h.update(arr.dtype.str.encode())
+        h.update(str(arr.shape).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+@dataclass
+class Block:
+    index: int
+    kind: str                   # MODEL | UPDATE
+    round: int
+    prev_hash: str
+    payload_digest: str
+    # learning information (prunable; None after pruning)
+    payload: Any = None
+    # update-block fields (§III.A: uploader address + committee score)
+    uploader: Optional[int] = None
+    score: Optional[float] = None
+    # block hash (filled on append)
+    hash: str = ""
+    pruned: bool = False
+
+    def compute_hash(self) -> str:
+        h = hashlib.sha256()
+        h.update(self.prev_hash.encode())
+        h.update(f"{self.index}|{self.kind}|{self.round}".encode())
+        h.update(self.payload_digest.encode())
+        h.update(f"{self.uploader}|{self.score}".encode())
+        return h.hexdigest()
+
+
+class LayoutError(RuntimeError):
+    pass
+
+
+class Chain:
+    """The alliance-chain ledger for one BFLC training community."""
+
+    def __init__(self, k_updates_per_round: int, off_chain_store=None):
+        if k_updates_per_round < 1:
+            raise ValueError("k must be >= 1")
+        self.k = k_updates_per_round
+        self.blocks: List[Block] = []
+        self._latest_model_idx: int = -1   # O(1) latest-model pointer
+        self._latest_model_round: int = -1
+        self.store = off_chain_store
+
+    # ------------------------------------------------------------------
+    # layout arithmetic (paper §III.A)
+    # ------------------------------------------------------------------
+    def model_index(self, t: int) -> int:
+        return t * (self.k + 1)
+
+    def update_index_range(self, t: int) -> Tuple[int, int]:
+        return t * (self.k + 1) + 1, (t + 1) * (self.k + 1) - 1
+
+    @property
+    def height(self) -> int:
+        return len(self.blocks)
+
+    @property
+    def current_round(self) -> int:
+        """Round whose updates are currently being collected."""
+        return self._latest_model_round
+
+    # ------------------------------------------------------------------
+    # appends
+    # ------------------------------------------------------------------
+    def _append(self, block: Block) -> Block:
+        block.prev_hash = self.blocks[-1].hash if self.blocks else "genesis"
+        block.hash = block.compute_hash()
+        self.blocks.append(block)
+        return block
+
+    def append_model(self, model: Any, round_t: int) -> Block:
+        expect = self.model_index(round_t)
+        if self.height != expect:
+            raise LayoutError(
+                f"model block for round {round_t} must sit at height {expect}, "
+                f"chain height is {self.height} (need {self.k} update blocks "
+                f"per round)"
+            )
+        digest = pytree_digest(model)
+        payload = model
+        if self.store is not None:
+            self.store.put(digest, model)
+            payload = None
+        blk = self._append(
+            Block(
+                index=self.height,
+                kind=MODEL,
+                round=round_t,
+                prev_hash="",
+                payload_digest=digest,
+                payload=payload,
+            )
+        )
+        self._latest_model_idx = blk.index
+        self._latest_model_round = round_t
+        return blk
+
+    def append_update(
+        self, update: Any, uploader: int, score: float
+    ) -> Block:
+        if self._latest_model_idx < 0:
+            raise LayoutError("no genesis model block yet")
+        t = self._latest_model_round
+        lo, hi = self.update_index_range(t)
+        if not (lo <= self.height <= hi):
+            raise LayoutError(
+                f"round {t} already holds {self.k} updates; aggregate first"
+            )
+        digest = pytree_digest(update)
+        payload = update
+        if self.store is not None:
+            self.store.put(digest, update)
+            payload = None
+        return self._append(
+            Block(
+                index=self.height,
+                kind=UPDATE,
+                round=t,
+                prev_hash="",
+                payload_digest=digest,
+                payload=payload,
+                uploader=uploader,
+                score=float(score),
+            )
+        )
+
+    def updates_this_round(self) -> int:
+        return self.height - 1 - self._latest_model_idx
+
+    def round_complete(self) -> bool:
+        return self.updates_this_round() >= self.k
+
+    # ------------------------------------------------------------------
+    # reads
+    # ------------------------------------------------------------------
+    def _payload(self, blk: Block) -> Any:
+        if blk.payload is not None:
+            return blk.payload
+        if self.store is not None:
+            return self.store.get(blk.payload_digest)
+        raise KeyError(f"block {blk.index} pruned and no off-chain store")
+
+    def latest_model(self) -> Tuple[int, Any]:
+        """O(1): returns (round, model)."""
+        if self._latest_model_idx < 0:
+            raise LayoutError("empty chain")
+        blk = self.blocks[self._latest_model_idx]
+        return blk.round, self._payload(blk)
+
+    def model_at_round(self, t: int) -> Any:
+        """Failure fallback (§IV.C): recover any historical global model."""
+        return self._payload(self.blocks[self.model_index(t)])
+
+    def updates_at_round(self, t: int) -> List[Block]:
+        lo, hi = self.update_index_range(t)
+        return self.blocks[lo : min(hi, self.height - 1) + 1]
+
+    # ------------------------------------------------------------------
+    # integrity + storage optimization
+    # ------------------------------------------------------------------
+    def verify(self) -> bool:
+        prev = "genesis"
+        for blk in self.blocks:
+            if blk.prev_hash != prev or blk.hash != blk.compute_hash():
+                return False
+            if blk.payload is not None and pytree_digest(blk.payload) != blk.payload_digest:
+                return False
+            # layout check
+            if blk.kind == MODEL and blk.index % (self.k + 1) != 0:
+                return False
+            if blk.kind == UPDATE and blk.index % (self.k + 1) == 0:
+                return False
+            prev = blk.hash
+        return True
+
+    def prune(self, keep_rounds: int = 1) -> int:
+        """§IV.D: drop historical payloads, keep headers + latest rounds.
+
+        Returns number of payloads dropped.  Verification of the hash chain
+        remains possible (digests are in headers); payload recovery needs the
+        off-chain store or an unpruned core node."""
+        if self._latest_model_idx < 0:
+            return 0
+        cutoff_round = max(0, self._latest_model_round - keep_rounds + 1)
+        cutoff_idx = self.model_index(cutoff_round)
+        dropped = 0
+        for blk in self.blocks[:cutoff_idx]:
+            if blk.payload is not None:
+                blk.payload = None
+                blk.pruned = True
+                dropped += 1
+        return dropped
+
+    def storage_bytes(self) -> int:
+        """Approximate resident payload bytes (for §IV.D benchmarks)."""
+        total = 0
+        for blk in self.blocks:
+            if blk.payload is not None:
+                total += sum(
+                    np.asarray(l).nbytes for l in jax.tree.leaves(blk.payload)
+                )
+        return total

@@ -1,0 +1,9 @@
+from repro.data.synthetic import FederatedDataset, make_femnist_like
+from repro.data.partition import dirichlet_partition, leaf_style_partition
+
+__all__ = [
+    "FederatedDataset",
+    "make_femnist_like",
+    "dirichlet_partition",
+    "leaf_style_partition",
+]

@@ -1,0 +1,13 @@
+from repro.fl.adapter import ModelAdapter, femnist_adapter
+from repro.fl.baselines import FLConfig, FLTrainer, train_standalone
+from repro.fl.runtime import BFLCConfig, BFLCRuntime
+
+__all__ = [
+    "ModelAdapter",
+    "femnist_adapter",
+    "FLConfig",
+    "FLTrainer",
+    "train_standalone",
+    "BFLCConfig",
+    "BFLCRuntime",
+]

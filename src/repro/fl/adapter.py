@@ -1,0 +1,66 @@
+"""ModelAdapter: the minimal interface BFLC needs from a global model.
+
+The chain stores pytrees; the committee needs loss/accuracy.  Everything
+else (CNN for the paper's experiments, the 10-arch LM zoo for the
+production path) plugs in through this.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ModelAdapter(NamedTuple):
+    init: Callable[[Any], Any]                     # key -> params
+    loss: Callable[[Any, Any, Any], jnp.ndarray]   # (params, x, y) -> scalar
+    accuracy: Callable[[Any, Any, Any], jnp.ndarray]
+
+
+def femnist_adapter(width: int = 32) -> ModelAdapter:
+    from repro.configs import femnist_cnn as cnn
+
+    return ModelAdapter(
+        init=lambda key: cnn.init_params(key, width=width),
+        loss=cnn.loss_fn,
+        accuracy=lambda p, x, y: cnn.accuracy(p, x, y),
+    )
+
+
+def lm_adapter(cfg) -> ModelAdapter:
+    """Language-model adapter: batch = (tokens, targets+mask packed)."""
+    from repro.models import forward
+    from repro.models.transformer import Batch
+
+    def loss(params, tokens, targets):
+        b = Batch(
+            tokens=tokens,
+            positions=jnp.broadcast_to(
+                jnp.arange(tokens.shape[1], dtype=jnp.int32)[None], tokens.shape
+            ),
+            targets=targets,
+        )
+        logits, aux = forward(params, cfg, b)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        return nll.mean() + aux
+
+    def accuracy(params, tokens, targets):
+        b = Batch(
+            tokens=tokens,
+            positions=jnp.broadcast_to(
+                jnp.arange(tokens.shape[1], dtype=jnp.int32)[None], tokens.shape
+            ),
+            targets=targets,
+        )
+        logits, _ = forward(params, cfg, b)
+        return (logits.argmax(-1) == targets).mean()
+
+    from repro.models import init_model
+
+    return ModelAdapter(
+        init=lambda key: init_model(key, cfg),
+        loss=loss,
+        accuracy=accuracy,
+    )

@@ -1,0 +1,132 @@
+"""Baselines the paper compares against (§V): Basic FL (FedAvg), CwMed, and
+stand-alone centralized training.  Same client/local-training substrate as
+BFLC so comparisons isolate the aggregation/consensus difference.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import aggregate_pytrees, apply_update
+from repro.core.attacks import ATTACKS
+from repro.data.synthetic import FederatedDataset
+from repro.fl.adapter import ModelAdapter
+from repro.fl.client import (
+    make_eval_fn,
+    make_local_train_fn,
+    sample_client_batches,
+)
+
+
+@dataclass
+class FLConfig:
+    active_proportion: float = 0.1
+    local_steps: int = 20
+    local_batch: int = 32
+    local_lr: float = 0.02
+    momentum: float = 0.9
+    aggregation: str = "fedavg"          # "fedavg" -> Basic FL; "cwmed" -> CwMed
+    size_weighted: bool = True
+    malicious_fraction: float = 0.0
+    attack: str = "gaussian"
+    attack_sigma: float = 1.0
+    seed: int = 0
+
+
+class FLTrainer:
+    """Basic FL / CwMed: central-server aggregation, no validation."""
+
+    def __init__(self, adapter: ModelAdapter, dataset: FederatedDataset,
+                 cfg: FLConfig, initial_params=None):
+        self.adapter = adapter
+        self.data = dataset
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        n = dataset.num_clients
+        self.malicious = set(
+            self.rng.choice(
+                n, int(round(cfg.malicious_fraction * n)), replace=False
+            ).tolist()
+        )
+        self.params = (initial_params if initial_params is not None
+                       else adapter.init(jax.random.PRNGKey(cfg.seed)))
+        self._local_train = make_local_train_fn(adapter, cfg.local_lr, cfg.momentum)
+        self._eval = make_eval_fn(adapter)
+        self.accuracies: List[float] = []
+
+    def evaluate(self) -> float:
+        return self._eval(self.params, self.data.test_images, self.data.test_labels)
+
+    def run_round(self):
+        cfg, rng = self.cfg, self.rng
+        n = self.data.num_clients
+        m = max(2, int(round(n * cfg.active_proportion)))
+        active = rng.choice(n, m, replace=False)
+
+        pairs = [
+            sample_client_batches(rng, self.data.client_images[i],
+                                  self.data.client_labels[i],
+                                  cfg.local_steps, cfg.local_batch)
+            for i in active
+        ]
+        xs = np.stack([p[0] for p in pairs])
+        ys = np.stack([p[1] for p in pairs])
+        stacked = self._local_train(self.params, xs, ys)
+        updates = [jax.tree.map(lambda x: x[i], stacked) for i in range(m)]
+        attack = ATTACKS[cfg.attack]
+        for idx, node in enumerate(active):
+            if int(node) in self.malicious:
+                updates[idx] = attack(
+                    rng, updates[idx], cfg.attack_sigma, ref=self.params
+                ) if cfg.attack == "gaussian" else attack(rng, updates[idx])
+
+        weights = None
+        if cfg.size_weighted and cfg.aggregation == "fedavg":
+            weights = [len(self.data.client_labels[i]) for i in active]
+        agg = aggregate_pytrees(updates, method=cfg.aggregation, weights=weights)
+        self.params = apply_update(self.params, agg)
+
+    def run(self, rounds: int, eval_every: int = 5) -> List[float]:
+        for r in range(rounds):
+            self.run_round()
+            if (r + 1) % eval_every == 0 or r == rounds - 1:
+                self.accuracies.append(self.evaluate())
+        return self.accuracies
+
+
+def train_standalone(
+    adapter: ModelAdapter,
+    dataset: FederatedDataset,
+    *,
+    steps: int,
+    batch: int = 64,
+    lr: float = 0.05,
+    momentum: float = 0.9,
+    seed: int = 0,
+    eval_every: int = 200,
+):
+    """Centralized training on the merged dataset (paper's upper bound)."""
+    rng = np.random.default_rng(seed)
+    imgs, labels = dataset.merged_train()
+    params = adapter.init(jax.random.PRNGKey(seed))
+    evaluate = make_eval_fn(adapter)
+
+    @jax.jit
+    def step(p, mu, x, y):
+        g = jax.grad(adapter.loss)(p, x, y)
+        mu = jax.tree.map(lambda m, gg: momentum * m + gg, mu, g)
+        p = jax.tree.map(lambda pp, m: pp - lr * m, p, mu)
+        return p, mu
+
+    mu = jax.tree.map(jnp.zeros_like, params)
+    accs = []
+    for s in range(steps):
+        idx = rng.integers(0, len(labels), batch)
+        params, mu = step(params, mu, imgs[idx], labels[idx])
+        if (s + 1) % eval_every == 0 or s == steps - 1:
+            accs.append(evaluate(params, dataset.test_images, dataset.test_labels))
+    return params, accs

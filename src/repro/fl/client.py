@@ -1,0 +1,87 @@
+"""Client-side local training, batched across clients with vmap.
+
+The paper's round has P trainers each running local SGD from the same global
+model.  We stack all P clients' sampled batches into (P, steps, b, ...) and
+``vmap`` the whole local-training loop — one XLA program trains every client
+of the round at once (this is also exactly the structure the sharded
+production path distributes over the mesh's data axis).
+
+Committee validation is the same trick: the (P updates x Q members) accuracy
+matrix — the P*Q cost term of §V.A — is one nested-vmap call.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.adapter import ModelAdapter
+
+
+def make_local_train_fn(adapter: ModelAdapter, lr: float, momentum: float = 0.0):
+    """Returns train(params, xs, ys) vmapped over a leading client axis.
+
+    xs: (P, steps, batch, ...), ys: (P, steps, batch).  Output: update pytree
+    stacked over P (update = locally-trained params - global params)."""
+
+    def one_client(params, xs, ys):
+        def step(carry, xy):
+            p, mu = carry
+            x, y = xy
+            g = jax.grad(adapter.loss)(p, x, y)
+            mu = jax.tree.map(lambda m, gg: momentum * m + gg, mu, g)
+            p = jax.tree.map(lambda pp, m: pp - lr * m, p, mu)
+            return (p, mu), None
+
+        mu0 = jax.tree.map(jnp.zeros_like, params)
+        (final, _), _ = jax.lax.scan(step, (params, mu0), (xs, ys))
+        return jax.tree.map(lambda a, b: a - b, final, params)
+
+    return jax.jit(jax.vmap(one_client, in_axes=(None, 0, 0)))
+
+
+def make_score_matrix_fn(adapter: ModelAdapter):
+    """Returns score(params, updates, val_x, val_y) -> (P, Q) accuracies.
+
+    updates: P-stacked pytree; val_x: (Q, vb, ...), val_y: (Q, vb).
+    Entry [i, j] = accuracy of (global + update_i) on member j's data —
+    the committee's minimized validation approach (§III.B)."""
+
+    def one(params, update, vx, vy):
+        candidate = jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, update)
+        return adapter.accuracy(candidate, vx, vy)
+
+    over_members = jax.vmap(one, in_axes=(None, None, 0, 0))
+    over_updates = jax.vmap(over_members, in_axes=(None, 0, None, None))
+    return jax.jit(over_updates)
+
+
+def make_eval_fn(adapter: ModelAdapter, eval_batch: int = 512):
+    @jax.jit
+    def _acc(params, x, y):
+        return adapter.accuracy(params, x, y)
+
+    def evaluate(params, images, labels) -> float:
+        accs, n = [], len(labels)
+        for i in range(0, n, eval_batch):
+            accs.append(
+                float(_acc(params, images[i : i + eval_batch], labels[i : i + eval_batch]))
+                * min(eval_batch, n - i)
+            )
+        return sum(accs) / n
+
+    return evaluate
+
+
+def sample_client_batches(
+    rng: np.random.Generator,
+    images: np.ndarray,
+    labels: np.ndarray,
+    steps: int,
+    batch: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    idx = rng.integers(0, len(labels), (steps, batch))
+    return images[idx], labels[idx]

@@ -1,0 +1,339 @@
+"""The BFLC round loop (paper Fig. 1): the decentralized runtime that ties
+chain + committee consensus + election + incentive together.
+
+Each round:
+  (1) active nodes are sampled (k% participation; offline nodes never block),
+  (2) trainers (active minus committee) locally train from the latest model
+      block and submit updates to the committee,
+  (3) the committee scores every update on its own local data (median over
+      members), packs the top-k qualified updates as update blocks,
+  (4) the smart-contract trigger fires at k updates: the committee aggregates
+      them into the next model block,
+  (5) a new committee is elected from this round's validated providers, and
+      rewards are distributed by contribution.
+
+Malicious behaviour (Gaussian-perturbation updates, collusive scoring) is
+injected per §V.B when configured.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import election as election_mod
+from repro.core.aggregation import aggregate_pytrees, apply_update
+from repro.core.attacks import ATTACKS, CollusionPolicy
+from repro.core.blockchain import Chain
+from repro.core.consensus import CommitteeConsensus
+from repro.core.incentive import distribute_rewards
+from repro.core.node import Node, NodeManager
+from repro.data.synthetic import FederatedDataset
+from repro.fl.adapter import ModelAdapter
+from repro.fl.client import (
+    make_eval_fn,
+    make_local_train_fn,
+    make_score_matrix_fn,
+    sample_client_batches,
+)
+
+
+@dataclass
+class BFLCConfig:
+    active_proportion: float = 0.1
+    committee_fraction: float = 0.4      # fraction of active nodes
+    k_updates: int = 8                   # update blocks per round (chain k)
+    local_steps: int = 20
+    local_batch: int = 32
+    local_lr: float = 0.02
+    momentum: float = 0.9
+    val_batch: int = 64
+    election_method: str = election_mod.BY_SCORE
+    accept_threshold: float = 0.5        # relative threshold (consensus stat)
+    aggregation: str = "fedavg"
+    weight_by_score: bool = True
+    use_kernels: bool = False
+    malicious_fraction: float = 0.0
+    attack: str = "gaussian"
+    attack_sigma: float = 1.0
+    collusion: bool = True
+    kick_below: float = -1.0             # blacklist uploaders under this score
+    # §IV.C's induction assumes the FIRST committee has an honest majority —
+    # the managers' initial trusted set (§IV.A).  True = bootstrap round-0
+    # committee from manager-vetted (non-malicious) nodes; False = uniform
+    # random (the conspiracy scenario of Fig. 3).
+    honest_bootstrap: bool = True
+    prune_keep_rounds: int = 0           # >0: prune old payloads each round
+    reward_pool: float = 10.0
+    seed: int = 0
+
+
+@dataclass
+class RoundLog:
+    round: int
+    trainers: int
+    committee: int
+    accepted_malicious: int
+    packed_malicious: int
+    mean_packed_score: float
+    consensus_validations: int
+    test_accuracy: Optional[float] = None
+
+
+def _unstack(tree, n: int):
+    return [jax.tree.map(lambda x: x[i], tree) for i in range(n)]
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+class BFLCRuntime:
+    def __init__(
+        self,
+        adapter: ModelAdapter,
+        dataset: FederatedDataset,
+        cfg: BFLCConfig,
+        initial_params=None,
+    ):
+        self.adapter = adapter
+        self.data = dataset
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+
+        # node community: blacklist-mode manager, malicious ground truth
+        self.manager = NodeManager()
+        n = dataset.num_clients
+        mal = set(
+            self.rng.choice(
+                n, int(round(cfg.malicious_fraction * n)), replace=False
+            ).tolist()
+        )
+        for i in range(n):
+            self.manager.join(
+                Node(node_id=i, data_indices=np.arange(len(dataset.client_labels[i])),
+                     is_malicious=i in mal)
+            )
+
+        # chain + genesis model block (#0: randomly initialized model, or a
+        # warm start — new communities may bootstrap from an existing model)
+        self.chain = Chain(cfg.k_updates)
+        params = (initial_params if initial_params is not None
+                  else adapter.init(jax.random.PRNGKey(cfg.seed)))
+        self.chain.append_model(params, 0)
+
+        # jitted batched helpers
+        self._local_train = make_local_train_fn(adapter, cfg.local_lr, cfg.momentum)
+        self._score_matrix = make_score_matrix_fn(adapter)
+        self._eval = make_eval_fn(adapter)
+        self._collusion = CollusionPolicy()
+
+        # fixed per-round sizes: keeps XLA programs shape-stable (one compile).
+        # Committee size >= 3: the median of two scores is their mean, so a
+        # single colluding member controls it (observed takeover cascade in a
+        # scaled-down Fig. 4 run with q=2 — the paper's own setting is q=18).
+        n_active = max(2, int(round(n * cfg.active_proportion)))
+        self.q_committee = max(3, int(round(n_active * cfg.committee_fraction)))
+        self.p_trainers = max(cfg.k_updates, n_active - self.q_committee)
+
+        # round-0 committee: no scores exist yet.  With honest_bootstrap the
+        # managers seat their initial trusted nodes (the paper's §IV.C
+        # precondition); otherwise uniform random — in which case a malicious
+        # population q close to 1/2 can seat a colluding majority with the
+        # Fig. 3 hypergeometric probability and take over permanently.
+        active = self.manager.sample_active(self.rng, cfg.active_proportion)
+        pool = active
+        if cfg.honest_bootstrap:
+            honest = [i for i in active
+                      if not self.manager.nodes[i].is_malicious]
+            pool = honest or active
+        self.committee: List[int] = sorted(
+            self.rng.choice(pool, min(self.q_committee, len(pool)),
+                            replace=False).tolist()
+        )
+        self._fill_committee()
+        self.logs: List[RoundLog] = []
+
+    def _fill_committee(self):
+        """Keep committee size exactly q_committee (shape stability).
+
+        Backfill prefers nodes with the best score history (the managers'
+        view of reputation) — random backfill re-opens the §IV.C induction
+        to takeover whenever a round packs fewer candidates than q."""
+        pool = [i for i in self.manager.active_ids() if i not in self.committee]
+        pool.sort(key=lambda i: -self.manager.nodes[i].latest_score)
+        while len(self.committee) < self.q_committee and pool:
+            self.committee.append(pool.pop(0))
+        self.committee = sorted(self.committee[: self.q_committee])
+
+    # ------------------------------------------------------------------
+    def global_params(self):
+        return self.chain.latest_model()[1]
+
+    def evaluate(self) -> float:
+        return self._eval(self.global_params(), self.data.test_images,
+                          self.data.test_labels)
+
+    # ------------------------------------------------------------------
+    def run_round(self, eval_test: bool = False) -> RoundLog:
+        cfg, rng = self.cfg, self.rng
+        t, params = self.chain.latest_model()
+
+        committee = [i for i in self.committee if i in self.manager.nodes]
+
+        # committee validation data (fixed per round)
+        vpairs = [
+            sample_client_batches(
+                rng, self.data.client_images[j], self.data.client_labels[j],
+                1, cfg.val_batch,
+            )
+            for j in committee
+        ]
+        vx = np.stack([p[0][0] for p in vpairs])
+        vy = np.stack([p[1][0] for p in vpairs])
+
+        consensus = CommitteeConsensus(
+            committee,
+            score_fn=None,  # bound per cohort below
+            accept_threshold=cfg.accept_threshold,
+        )
+
+        # Nodes submit updates until k QUALIFIED updates accumulate (the
+        # paper's aggregation trigger).  Packing unqualified updates just to
+        # reach k would force one poisoned update per round whenever honest
+        # trainers < k — the takeover leak found in testing.
+        all_updates: Dict[int, object] = {}
+        trainers_total: List[int] = []
+        attack = ATTACKS[cfg.attack]
+        for cohort in range(3):   # at most 3 cohorts per round (sim bound)
+            active = self.manager.sample_active(rng, cfg.active_proportion)
+            trainers = [
+                i for i in active
+                if i not in committee and i not in all_updates
+            ][: self.p_trainers]
+            if len(trainers) < self.p_trainers:
+                extra = [
+                    i for i in self.manager.active_ids()
+                    if i not in committee and i not in all_updates
+                    and i not in trainers
+                ]
+                need = min(self.p_trainers - len(trainers), len(extra))
+                if need > 0:
+                    trainers += rng.choice(
+                        extra, size=need, replace=False
+                    ).tolist()
+            if not trainers:
+                break
+
+            # (2) local training, batched over the cohort
+            pairs = [
+                sample_client_batches(
+                    rng, self.data.client_images[i],
+                    self.data.client_labels[i],
+                    cfg.local_steps, cfg.local_batch,
+                )
+                for i in trainers
+            ]
+            xs = np.stack([p[0] for p in pairs])
+            ys = np.stack([p[1] for p in pairs])
+            updates_stacked = self._local_train(params, xs, ys)
+            updates = _unstack(updates_stacked, len(trainers))
+            for idx, node_id in enumerate(trainers):
+                if self.manager.nodes[node_id].is_malicious:
+                    updates[idx] = attack(
+                        rng, updates[idx], cfg.attack_sigma, ref=params
+                    ) if cfg.attack == "gaussian" else attack(rng, updates[idx])
+
+            # (3) committee validation: the P x Q score matrix in one call
+            honest_scores = np.asarray(
+                self._score_matrix(params, _stack(updates), vx, vy)
+            )                                               # (P, Q)
+            score_table: Dict[int, Dict[int, float]] = {}
+            for i, uploader in enumerate(trainers):
+                row = {}
+                for j, member in enumerate(committee):
+                    s = float(honest_scores[i, j])
+                    if cfg.collusion:
+                        s = self._collusion.score(
+                            rng,
+                            self.manager.nodes[member].is_malicious,
+                            self.manager.nodes[uploader].is_malicious,
+                            s,
+                        )
+                    row[member] = s
+                score_table[uploader] = row
+            consensus.score_fn = lambda m, payload: score_table[payload][m]
+            for idx, uploader in enumerate(trainers):
+                consensus.validate(uploader, uploader)
+                all_updates[uploader] = updates[idx]
+            trainers_total += trainers
+            if len(consensus.accepted_records()) >= cfg.k_updates:
+                break
+
+        # (3b) pack the top-k QUALIFIED updates as update blocks; if the
+        # community could not produce k qualified updates (extreme malicious
+        # fractions), the best qualified one fills the remaining slots so the
+        # chain layout invariant holds (logged via duplicate uploader ids).
+        records = sorted(
+            consensus.accepted_records(), key=lambda r: -r.median_score
+        )[: cfg.k_updates]
+        if not records:  # nothing qualified: fall back to best available
+            records = sorted(
+                consensus.records, key=lambda r: -r.median_score
+            )[:1]
+        while len(records) < cfg.k_updates:
+            records.append(records[0])
+        packed_ids = [r.uploader for r in records]
+        packed_scores = [r.median_score for r in records]
+        packed_updates = [all_updates[u] for u in packed_ids]
+        trainers = trainers_total
+        for i, (u, sc) in enumerate(zip(packed_ids, packed_scores)):
+            self.chain.append_update(packed_updates[i], u, sc)
+            self.manager.nodes[u].score_history.append(sc)
+
+        # (4) aggregation trigger -> next model block
+        weights = packed_scores if cfg.weight_by_score else None
+        agg = aggregate_pytrees(
+            packed_updates, method=cfg.aggregation, weights=weights,
+            use_kernels=cfg.use_kernels,
+        )
+        new_params = apply_update(params, agg)
+        self.chain.append_model(new_params, t + 1)
+
+        # (5) election + incentive + housekeeping
+        cand = dict(zip(packed_ids, packed_scores))
+        self.committee = election_mod.elect(
+            cfg.election_method, rng, cand, self.q_committee
+        ) or committee
+        self._fill_committee()
+        distribute_rewards(self.manager, cand, cfg.reward_pool)
+        if cfg.kick_below >= 0:
+            for r in consensus.records:
+                if r.median_score < cfg.kick_below:
+                    self.manager.kick(r.uploader)
+        if cfg.prune_keep_rounds > 0:
+            self.chain.prune(cfg.prune_keep_rounds)
+
+        mal_nodes = {i for i, nd in self.manager.nodes.items() if nd.is_malicious}
+        log = RoundLog(
+            round=t,
+            trainers=len(trainers),
+            committee=len(committee),
+            accepted_malicious=sum(
+                1 for r in consensus.accepted_records() if r.uploader in mal_nodes
+            ),
+            packed_malicious=sum(1 for u in packed_ids if u in mal_nodes),
+            mean_packed_score=float(np.mean(packed_scores)) if packed_scores else 0.0,
+            consensus_validations=consensus.stats.validations,
+            test_accuracy=self.evaluate() if eval_test else None,
+        )
+        self.logs.append(log)
+        return log
+
+    def run(self, rounds: int, eval_every: int = 5) -> List[RoundLog]:
+        for r in range(rounds):
+            self.run_round(eval_test=((r + 1) % eval_every == 0) or r == rounds - 1)
+        return self.logs

@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: coordinate-wise median over K client updates (CwMed,
+Yin et al. 2018 — the paper's robust-aggregation baseline, Fig. 4).
+
+TPU adaptation (DESIGN.md §4): a CUDA CwMed sorts each coordinate in a
+thread's registers (data-dependent branches, fine on GPU).  TPU VPU lanes
+have no per-lane control flow, so we sort the K *rows* of a (K, BLOCK_D)
+VMEM tile with an **odd-even transposition network**: K static phases of
+vectorized min/max — branch-free, lane-parallel across all BLOCK_D
+coordinates at once.  K is the committee's update count (small), so the
+O(K^2) compare-exchanges are negligible against the HBM stream.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_D = 2048
+
+
+def _cwmed_kernel(x_ref, o_ref, *, K: int):
+    rows = [x_ref[k, :].astype(jnp.float32) for k in range(K)]
+    # odd-even transposition sort: after K phases rows are sorted per lane
+    for phase in range(K):
+        start = phase % 2
+        for i in range(start, K - 1, 2):
+            lo = jnp.minimum(rows[i], rows[i + 1])
+            hi = jnp.maximum(rows[i], rows[i + 1])
+            rows[i], rows[i + 1] = lo, hi
+    if K % 2 == 1:
+        med = rows[K // 2]
+    else:
+        med = 0.5 * (rows[K // 2 - 1] + rows[K // 2])
+    o_ref[0, :] = med
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cwmed_kernel(stack: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+    """stack: (K, D) f32 -> (D,) f32 per-coordinate median."""
+    K, D = stack.shape
+    assert D % BLOCK_D == 0, D
+    out = pl.pallas_call(
+        functools.partial(_cwmed_kernel, K=K),
+        grid=(D // BLOCK_D,),
+        in_specs=[pl.BlockSpec((K, BLOCK_D), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, BLOCK_D), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, D), jnp.float32),
+        interpret=interpret,
+    )(stack)
+    return out[0]

@@ -1,0 +1,75 @@
+"""jit'd public wrappers around the Pallas kernels: pad to tile boundaries,
+pick interpret mode off-TPU, and expose pytree-level helpers.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.cwmed import cwmed_kernel
+from repro.kernels.fedavg_agg import BLOCK_D, fedavg_agg_kernel
+from repro.kernels.quantize import dequantize_kernel, quantize_kernel
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to_block(x: jnp.ndarray, axis: int = -1) -> Tuple[jnp.ndarray, int]:
+    d = x.shape[axis]
+    pad = (-d) % BLOCK_D
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+def fedavg_agg(stack: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """(K, D) x (K,) -> (D,) weighted sum via the Pallas kernel."""
+    D = stack.shape[1]
+    padded, _ = _pad_to_block(stack)
+    out = fedavg_agg_kernel(padded, weights, interpret=_interpret())
+    return out[:D]
+
+
+def cwmed(stack: jnp.ndarray) -> jnp.ndarray:
+    """(K, D) -> (D,) coordinate-wise median via the Pallas kernel."""
+    D = stack.shape[1]
+    # pad with +inf/-inf in equal halves would bias the median; instead pad
+    # with the first row's values so padded lanes stay valid and are sliced off
+    pad = (-D) % BLOCK_D
+    if pad:
+        fill = jnp.broadcast_to(stack[:, :1], (stack.shape[0], pad))
+        stack = jnp.concatenate([stack, fill], axis=1)
+    out = cwmed_kernel(stack, interpret=_interpret())
+    return out[:D]
+
+
+def quantize(x: jnp.ndarray):
+    """(D,) -> (q int8 (D,), scales, D) — chain-storage codec."""
+    D = x.shape[0]
+    padded, _ = _pad_to_block(x)
+    q, s = quantize_kernel(padded, interpret=_interpret())
+    return q, s, D
+
+
+def dequantize(q: jnp.ndarray, scales: jnp.ndarray, D: int) -> jnp.ndarray:
+    out = dequantize_kernel(q, scales, interpret=_interpret())
+    return out[:D]
+
+
+def quantize_pytree(tree):
+    """Flatten + quantize a model/update pytree for on-chain storage."""
+    from jax.flatten_util import ravel_pytree
+
+    flat, unravel = ravel_pytree(tree)
+    q, s, D = quantize(flat.astype(jnp.float32))
+    return {"q": q, "scales": s, "d": D}, unravel
+
+
+def dequantize_pytree(blob, unravel):
+    return unravel(dequantize(blob["q"], blob["scales"], blob["d"]))

@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for every kernel (the allclose targets of the tests)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+BLOCK_D = 2048  # must match the kernels' tiling
+
+
+def fedavg_agg_ref(stack: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum(
+        "k,kd->d", weights.astype(jnp.float32), stack.astype(jnp.float32)
+    )
+
+
+def cwmed_ref(stack: jnp.ndarray) -> jnp.ndarray:
+    return jnp.median(stack.astype(jnp.float32), axis=0)
+
+
+def quantize_ref(x: jnp.ndarray):
+    D = x.shape[0]
+    xb = x.astype(jnp.float32).reshape(-1, BLOCK_D)
+    amax = jnp.max(jnp.abs(xb), axis=1)
+    scales = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xb / scales[:, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(D), scales
+
+
+def dequantize_ref(q: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
+    D = q.shape[0]
+    return (q.reshape(-1, BLOCK_D).astype(jnp.float32) * scales[:, None]).reshape(D)

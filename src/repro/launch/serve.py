@@ -1,0 +1,85 @@
+"""Batched serving driver: prefill a batch of requests, then decode tokens
+with the same sharded decode step the dry-run compiles.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --smoke \
+      --batch 4 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config (CPU-friendly)")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    from repro.configs import registry
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.shardings import ShardingPolicy
+    from repro.launch.steps import make_decode_step, make_prefill_step
+    from repro.models import init_model
+    from repro.models.transformer import Batch
+
+    cfg = (registry.smoke_config(args.arch) if args.smoke
+           else registry.get_config(args.arch))
+    if not cfg.is_decoder():
+        raise SystemExit(f"{args.arch} is encoder-only: no decode step")
+    mesh = make_host_mesh(1, 1)
+    pol = ShardingPolicy(dp_axes=("data",), dp_sizes=(1,), model_axis_size=1, fsdp=False)
+
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    max_len = args.prompt_len + args.gen
+    prefill = jax.jit(make_prefill_step(cfg, mesh, pol, max_len=max_len))
+    decode = jax.jit(make_decode_step(cfg, mesh, pol))
+
+    rng = np.random.default_rng(0)
+    B, S = args.batch, args.prompt_len
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    batch = Batch(
+        tokens=prompts,
+        positions=jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S)),
+        targets=jnp.zeros((B, S), jnp.int32),
+        loss_mask=jnp.ones((B, S), jnp.float32),
+    )
+    if cfg.rope == "mrope":
+        batch = batch._replace(
+            positions=jnp.broadcast_to(
+                jnp.arange(S, dtype=jnp.int32)[None, None], (3, B, S)
+            ),
+            embeds=jnp.zeros((B, S, cfg.d_model), jnp.dtype(cfg.dtype)),
+            embed_mask=jnp.zeros((B, S), bool),
+        )
+
+    t0 = time.time()
+    logits, cache = prefill(params, batch)
+    next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+    print(f"prefill {B}x{S}: {time.time()-t0:.2f}s")
+
+    toks = [next_tok]
+    t0 = time.time()
+    for i in range(args.gen):
+        pos = jnp.full((B,), S + i, jnp.int32)
+        mrope = (jnp.broadcast_to(pos[None, :, None], (3, B, 1))
+                 if cfg.rope == "mrope" else None)
+        next_tok, logits, cache = decode(params, toks[-1], pos, cache, mrope)
+        toks.append(next_tok)
+    dt = time.time() - t0
+    out = jnp.concatenate(toks, axis=1)
+    print(f"decoded {args.gen} tokens x {B} reqs in {dt:.2f}s "
+          f"({B*args.gen/dt:.1f} tok/s)")
+    print("sample token ids:", np.asarray(out[0])[:16])
+
+
+if __name__ == "__main__":
+    main()

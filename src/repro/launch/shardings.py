@@ -1,0 +1,235 @@
+"""Sharding policy: PartitionSpecs for parameters, batches and caches.
+
+Baseline policy (recorded as such in EXPERIMENTS.md §Perf):
+
+* tensor parallelism over ``model``: attention heads / FFN hidden / experts /
+  vocab;
+* FSDP over ``data`` (+``pod``): the other big matrix dim, so giant models
+  (Jamba-398B) fit — per-layer all-gathers are the cost, which the perf pass
+  then attacks (small models: FSDP off is one of the §Perf levers);
+* batch over the data axes; ``long_500k`` (batch=1) shards the KV-cache
+  sequence axis instead.
+
+Rules are (parent-context, leaf-name)-keyed, applied over the param pytree;
+leaves under the scanned ``units`` stack get a leading ``None`` axis.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class ShardingPolicy:
+    fsdp: bool = True
+    dp_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    model_axis_size: int = 16
+    dp_sizes: Tuple[int, ...] = (16,)   # aligned with dp_axes
+    # shard experts' big dims over data (FSDP) as well (perf lever)
+    shard_moe_fsdp: bool = True
+    # sequence-parallel residual stream: activations (B,S,D) keep S sharded
+    # over the model axis between layers (perf lever; attention-only archs)
+    seq_parallel_acts: bool = False
+    # 2D expert parallelism: expert Fv stays sliced over data inside the MoE
+    # shard_map (tokens gathered instead of weights)
+    moe_tp_over_dp: bool = False
+    # model-dim-sharded residual stream (RWKV: token shift is over time, so a
+    # D-sharded residual is legal and turns TP all-reduces into local math)
+    act_shard_d: bool = False
+
+    @property
+    def fsdp_axis(self):
+        return self.dp_axes if self.fsdp else None
+
+    def axis_size(self, entry) -> int:
+        """Product of mesh-axis sizes for one PartitionSpec entry."""
+        if entry is None:
+            return 1
+        names = entry if isinstance(entry, (tuple, list)) else (entry,)
+        sizes = dict(zip(self.dp_axes, self.dp_sizes))
+        sizes[self.model_axis] = self.model_axis_size
+        n = 1
+        for a in names:
+            n *= sizes.get(a, 1)
+        return n
+
+
+def _param_rule(owner: str, name: str, pol: ShardingPolicy) -> Optional[P]:
+    M, F = pol.model_axis, pol.fsdp_axis
+    moe_f = F if pol.shard_moe_fsdp else None
+    col2 = P(F, M)           # (in, out): out over model, in over fsdp
+    row2 = P(M, F)           # (in, out): in over model
+    table = {
+        ("top", "embed"): P(M, F),
+        ("top", "lm_head"): P(F, M),
+        ("mixer", "wq"): col2,
+        ("mixer", "wk"): col2,
+        ("mixer", "wv"): col2,
+        ("mixer", "wg"): col2,
+        ("mixer", "wr"): col2,
+        ("mixer", "wo"): row2,
+        ("mixer", "bq"): P(M),
+        ("mixer", "bk"): P(M),
+        ("mixer", "bv"): P(M),
+        ("mixer", "in_proj"): col2,
+        ("mixer", "out_proj"): row2,
+        ("mixer", "x_proj"): P(M, None),
+        ("mixer", "dt_proj"): P(None, M),
+        ("mixer", "dt_bias"): P(M),
+        ("mixer", "conv_w"): P(None, M),
+        ("mixer", "conv_b"): P(M),
+        ("mixer", "A_log"): P(M, None),
+        ("mixer", "D"): P(M),
+        # RWKV DDLoRA weights are tiny (<3 MB) — sharding their output dim
+        # over `model` forced a (B,S,D) activation all-gather per interpolant
+        # per layer (656 GB/device/step on rwkv6 train, §Perf H2). Replicate.
+        ("mixer", "mix_w1"): P(),
+        ("mixer", "mix_w2"): P(),
+        ("mixer", "decay_w2"): P(),
+        ("mlp", "gate"): col2,
+        ("mlp", "up"): col2,
+        ("mlp", "down"): row2,
+        ("mlp", "wk"): col2,
+        ("mlp", "wv"): row2,
+        ("mlp", "wr"): col2,
+        ("mlp", "router"): P(F, None),
+        # MoE expert weights (V, D, Fv) / (V, Fv, D): experts over model.
+        # tp_over_dp slices Fv over data (matches the shard_map in_specs,
+        # so no per-layer resharding); otherwise FSDP goes on the other dim.
+        ("mlp", "moe_up"): P(M, None, moe_f) if pol.moe_tp_over_dp
+        else P(M, moe_f, None),
+        ("mlp", "moe_gate"): P(M, None, moe_f) if pol.moe_tp_over_dp
+        else P(M, moe_f, None),
+        ("mlp", "moe_down"): P(M, moe_f, None) if pol.moe_tp_over_dp
+        else P(M, None, moe_f),
+    }
+    return table.get((owner, name))
+
+
+def _leaf_spec(name: str, leaf, owner: str, under_units: bool,
+               pol: ShardingPolicy) -> P:
+    lead = (None,) if under_units else ()
+    base = leaf.ndim - len(lead)
+    is_moe = owner == "mlp" and name in ("up", "gate", "down") and base == 3
+    key = f"moe_{name}" if is_moe else name
+    spec = _param_rule(owner, key, pol)
+    if spec is None or len(spec) > base:
+        spec = P()  # replicate (norms, small vectors, unknown leaves)
+    parts = lead + tuple(spec) + (None,) * (base - len(spec))
+    parts = parts[: leaf.ndim]
+    # divisibility guard: drop sharding on dims the mesh axis doesn't divide
+    # (e.g. HuBERT's 504-class head on a 16-way model axis)
+    shape = leaf.shape
+    parts = tuple(
+        e if shape[i] % pol.axis_size(e) == 0 else None
+        for i, e in enumerate(parts)
+    )
+    return P(*parts)
+
+
+def _walk_layer(layer: dict, pol: ShardingPolicy, under_units: bool) -> dict:
+    out = {}
+    for part, sub in layer.items():
+        if part in ("mixer", "mlp"):
+            sub_out = {}
+            for name, leaf in sub.items():
+                if isinstance(leaf, dict):
+                    sub_out[name] = jax.tree.map(lambda x: P(), leaf)
+                else:
+                    sub_out[name] = _leaf_spec(name, leaf, part, under_units, pol)
+            out[part] = sub_out
+        else:  # norm1 / norm2
+            out[part] = jax.tree.map(lambda x: P(), sub)
+    return out
+
+
+def param_pspecs(cfg: ModelConfig, params: dict, pol: ShardingPolicy) -> dict:
+    """PartitionSpec pytree matching `params` (arrays or ShapeDtypeStructs)."""
+    out = {}
+    for k, v in params.items():
+        if k == "units":
+            out[k] = tuple(_walk_layer(lp, pol, True) for lp in v)
+        elif k == "tail":
+            out[k] = tuple(_walk_layer(lp, pol, False) for lp in v)
+        elif isinstance(v, dict):
+            out[k] = jax.tree.map(lambda x: P(), v)
+        else:
+            out[k] = _leaf_spec(k, v, "top", False, pol)
+    return out
+
+
+# ----------------------------------------------------------------------------
+# batch / cache specs
+# ----------------------------------------------------------------------------
+
+
+def batch_pspecs(cfg: ModelConfig, pol: ShardingPolicy, *, batch_sharded: bool):
+    from repro.models.transformer import Batch
+
+    dp = pol.dp_axes if batch_sharded else None
+    pos = P(None, dp, None) if cfg.rope == "mrope" else P(dp, None)
+    return Batch(
+        tokens=None if cfg.frontend == "audio" else P(dp, None),
+        embeds=P(dp, None, None) if cfg.frontend else None,
+        embed_mask=P(dp, None) if cfg.frontend else None,
+        positions=pos,
+        targets=P(dp, None),
+        loss_mask=P(dp, None),
+    )
+
+
+def cache_pspecs(cfg: ModelConfig, cache, pol: ShardingPolicy,
+                 *, batch_sharded: bool):
+    """Specs for the decode cache pytree.
+
+    attn k/v (B, L, Kv, hd): batch over dp; kv-heads over model when
+    divisible by the model axis, else the sequence axis takes the model
+    axis.  batch=1 (long_500k): sequence over data (+ model when kv heads
+    don't shard)."""
+    M = pol.model_axis
+    msize = pol.model_axis_size
+    dp = pol.dp_axes if batch_sharded else None
+    kv_over_model = cfg.num_kv_heads % msize == 0 and cfg.num_kv_heads > 0
+    rwkv_heads = cfg.d_model // max(cfg.rwkv_head_dim, 1)
+    h_over_model = rwkv_heads % msize == 0
+
+    if batch_sharded:
+        seq_axes = M if not kv_over_model else None
+    else:
+        seq_axes = ("data", M) if not kv_over_model else ("data",)
+
+    def leaf_spec(path, leaf):
+        names = [str(getattr(p, "key", getattr(p, "name", p))) for p in path]
+        name = names[-1]
+        under_units = "units" in names
+        lead = (None,) if under_units else ()
+        if name in ("k", "v"):
+            return P(*lead, dp, seq_axes, M if kv_over_model else None, None)
+        if name == "pos":
+            return P(*lead, dp, seq_axes)
+        if name == "conv":
+            return P(*lead, dp, None, M)
+        if name == "ssm":
+            return P(*lead, dp, M, None)
+        if name == "shift":
+            return P(*lead, dp, None)
+        if name == "wkv":
+            return P(*lead, dp, M if h_over_model else None, None, None)
+        base = leaf.ndim - len(lead)
+        return P(*lead, *([None] * base))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,20 @@
+from repro.models.config import LayerSpec, ModelConfig
+from repro.models.transformer import (
+    Batch,
+    decode_step,
+    forward,
+    init_model,
+    prefill,
+)
+from repro.models.cache import init_cache
+
+__all__ = [
+    "Batch",
+    "LayerSpec",
+    "ModelConfig",
+    "decode_step",
+    "forward",
+    "init_cache",
+    "init_model",
+    "prefill",
+]

@@ -1,0 +1,63 @@
+"""Decode-cache containers for the heterogeneous layer stack.
+
+A model cache is ``{"units": stacked_pytree, "tail": (per-layer, ...)}`` where
+the stacked pytree has a leading ``num_units`` axis so the decode step can
+``lax.scan`` over (unit_params, unit_cache) together.
+
+Per-layer cache by mixer kind:
+  attn / attn_global : {"k": (B, max_len, Kv, hd), "v": ..., "pos": (B, max_len)}
+  attn_swa / local   : same, but length min(window, max_len) (ring buffer)
+  mamba              : {"conv": (B, dc-1, din), "ssm": (B, din, ds)}
+  rwkv6              : {"tm": {shift, wkv}, "cm": {shift}}
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mamba as mamba_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.attention import is_windowed
+from repro.models.config import ModelConfig, LayerSpec
+
+
+def attn_cache_len(cfg: ModelConfig, mixer: str, max_len: int) -> int:
+    if is_windowed(mixer) and cfg.sliding_window > 0:
+        return min(cfg.sliding_window, max_len)
+    return max_len
+
+
+def init_layer_cache(
+    cfg: ModelConfig, spec: LayerSpec, batch: int, max_len: int, dtype
+):
+    if spec.mixer.startswith("attn"):
+        L = attn_cache_len(cfg, spec.mixer, max_len)
+        hd = cfg.resolved_head_dim
+        return {
+            "k": jnp.zeros((batch, L, cfg.num_kv_heads, hd), dtype),
+            "v": jnp.zeros((batch, L, cfg.num_kv_heads, hd), dtype),
+            "pos": jnp.full((batch, L), -1, jnp.int32),
+        }
+    if spec.mixer == "mamba":
+        return mamba_mod.init_mamba_state(cfg, batch, dtype)
+    if spec.mixer == "rwkv6":
+        return rwkv_mod.init_rwkv_state(cfg, batch, dtype)
+    raise ValueError(spec.mixer)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
+    unit = tuple(
+        init_layer_cache(cfg, spec, batch, max_len, dtype) for spec in cfg.unit
+    )
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.num_units,) + x.shape).copy()
+        if cfg.num_units
+        else x,
+        unit,
+    )
+    tail = tuple(
+        init_layer_cache(cfg, spec, batch, max_len, dtype) for spec in cfg.tail
+    )
+    return {"units": stacked, "tail": tail}

@@ -1,0 +1,197 @@
+"""Pure-JAX flash attention with a custom VJP (recompute-based backward).
+
+Structure (v3 — the v1->v2->v3 story is EXPERIMENTS.md §Perf P0/P2/H-pre):
+
+* Q blocks are a *batched* dim, not an outer scan (v2): GSPMD can shard them.
+* ALL blocked tensors share one canonical layout (B, nq, Kv, G, QB, ...) and
+  one ``block_spec`` constraint — q, the (m, l, acc) carries, lse, and the
+  backward's dout/delta.  v2 constrained only q: the *carries* were free, so
+  the saved lse could land with a different sharding than the H-sharded
+  score blocks and the backward all-gathered every P tile (1.6 TB/device on
+  qwen3 train_4k).
+* One ``lax.scan`` over KV blocks; custom_vjp saves (q, k, v, out, lse) and
+  recomputes P per block — O(S) memory, canonical ~2x attention recompute.
+* KV blocks stay bf16; all einsums accumulate f32.
+
+GQA layout: q (B,Sq,H,Dh); k,v (B,Skv,Kv,Dh); H = Kv*G (callers that want
+clean 16-way head sharding pass kv expanded to H, i.e. G=1).
+``block_spec`` is a 6-entry PartitionSpec over (B, nq, Kv, G, QB, Dh/KB),
+trimmed to each tensor's rank: entry 1 shards q-blocks, entry 2 shards heads.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+KV_BLOCK = 512
+NEG_INF = -1e30
+
+
+def pick_q_block(seq: int, model_size: int, max_block: int = 512) -> int:
+    """Largest block <= max_block such that (seq/block) % model_size == 0
+    (falls back to max_block when impossible)."""
+    for qb in (512, 256, 128, 64):
+        if qb > max_block:
+            continue
+        nq = seq // qb
+        if seq % qb == 0 and nq % model_size == 0:
+            return qb
+    return max_block
+
+
+def _pair_mask(q_pos, kv_pos, *, causal: bool, window: int):
+    q = q_pos[..., :, None]
+    k = kv_pos[..., None, :]
+    ok = k >= 0
+    if causal:
+        ok = ok & (k <= q)
+    if window > 0:
+        ok = ok & (q - k < window)
+    return ok
+
+
+def _constrain(x, spec, mesh):
+    if spec is None or mesh is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    trimmed = P(*tuple(spec)[: x.ndim])  # canonical (B,nq,Kv,G,...) prefix
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, trimmed)
+    )
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9))
+def flash_attention(
+    q, k, v, q_pos, kv_pos,
+    causal: bool, window: int, q_block: int = 512,
+    block_spec=None, mesh=None,
+):
+    """Returns out (B,Sq,H,Dh).  Sq % q_block == 0, Skv % KV_BLOCK == 0."""
+    out, _ = _fwd_impl(q, k, v, q_pos, kv_pos, causal, window, q_block,
+                       block_spec, mesh)
+    return out
+
+
+def _block_q(t, nq, q_block, Kv, G, Dh):
+    """(B,Sq,H,Dh) -> canonical (B,nq,Kv,G,QB,Dh)."""
+    B = t.shape[0]
+    return t.reshape(B, nq, q_block, Kv, G, Dh).transpose(0, 1, 3, 4, 2, 5)
+
+
+def _unblock_q(t, B, Sq, H, Dh):
+    """(B,nq,Kv,G,QB,Dh) -> (B,Sq,H,Dh)."""
+    return t.transpose(0, 1, 4, 2, 3, 5).reshape(B, Sq, H, Dh)
+
+
+def _fwd_impl(q, k, v, q_pos, kv_pos, causal, window, q_block,
+              block_spec, mesh):
+    B, Sq, H, Dh = q.shape
+    Skv, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    nq = Sq // q_block
+    nk = Skv // KV_BLOCK
+
+    qf = _constrain(
+        _block_q(q.astype(jnp.float32) * (Dh ** -0.5), nq, q_block, Kv, G, Dh),
+        block_spec, mesh,
+    )                                                   # (B,nq,Kv,G,QB,Dh)
+    qp = q_pos.reshape(B, nq, q_block)
+    kf = jnp.moveaxis(k.reshape(B, nk, KV_BLOCK, Kv, Dh), 1, 0)  # bf16 ok
+    vf = jnp.moveaxis(v.reshape(B, nk, KV_BLOCK, Kv, Dh), 1, 0)
+    kp = jnp.moveaxis(kv_pos.reshape(B, nk, KV_BLOCK), 1, 0)
+
+    def kv_body(carry, ki):
+        m, l, acc = carry                               # (B,nq,Kv,G,QB[,Dh])
+        kb, vb, kpb = ki
+        s = jnp.einsum("bnkgqd,bskd->bnkgqs", qf, kb,
+                       preferred_element_type=jnp.float32)
+        mask = _pair_mask(qp, kpb[:, None], causal=causal, window=window)
+        s = jnp.where(mask[:, :, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        scale = jnp.exp(m - m_new)
+        l_new = l * scale + p.sum(axis=-1)
+        acc_new = acc * scale[..., None] + jnp.einsum(
+            "bnkgqs,bskd->bnkgqd", p, vb,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    init = (
+        _constrain(jnp.full((B, nq, Kv, G, q_block), NEG_INF, jnp.float32),
+                   block_spec, mesh),
+        _constrain(jnp.zeros((B, nq, Kv, G, q_block), jnp.float32),
+                   block_spec, mesh),
+        _constrain(jnp.zeros((B, nq, Kv, G, q_block, Dh), jnp.float32),
+                   block_spec, mesh),
+    )
+    (m, l, acc), _ = jax.lax.scan(kv_body, init, (kf, vf, kp))
+    l_safe = jnp.maximum(l, 1e-30)
+    out = acc / l_safe[..., None]                       # (B,nq,Kv,G,QB,Dh)
+    lse = _constrain(m + jnp.log(l_safe), block_spec, mesh)
+    out = _unblock_q(out, B, Sq, H, Dh).astype(q.dtype)
+    return out, lse
+
+
+def _fwd(q, k, v, q_pos, kv_pos, causal, window, q_block, block_spec, mesh):
+    out, lse = _fwd_impl(q, k, v, q_pos, kv_pos, causal, window, q_block,
+                         block_spec, mesh)
+    return out, (q, k, v, q_pos, kv_pos, out, lse)
+
+
+def _bwd(causal, window, q_block, block_spec, mesh, res, dout):
+    q, k, v, q_pos, kv_pos, out, lse = res
+    B, Sq, H, Dh = q.shape
+    Skv, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    nq = Sq // q_block
+    nk = Skv // KV_BLOCK
+    scale = Dh ** -0.5
+
+    qf = _constrain(
+        _block_q(q.astype(jnp.float32) * scale, nq, q_block, Kv, G, Dh),
+        block_spec, mesh,
+    )
+    dof = _constrain(
+        _block_q(dout.astype(jnp.float32), nq, q_block, Kv, G, Dh),
+        block_spec, mesh,
+    )
+    of = _block_q(out.astype(jnp.float32), nq, q_block, Kv, G, Dh)
+    qp = q_pos.reshape(B, nq, q_block)
+    kf = jnp.moveaxis(k.reshape(B, nk, KV_BLOCK, Kv, Dh), 1, 0)
+    vf = jnp.moveaxis(v.reshape(B, nk, KV_BLOCK, Kv, Dh), 1, 0)
+    kp = jnp.moveaxis(kv_pos.reshape(B, nk, KV_BLOCK), 1, 0)
+    lse = _constrain(lse, block_spec, mesh)             # (B,nq,Kv,G,QB)
+    delta = _constrain(
+        jnp.einsum("bnkgqd,bnkgqd->bnkgq", dof, of), block_spec, mesh
+    )
+
+    def kv_body(dq, ki):
+        kb, vb, kpb = ki
+        s = jnp.einsum("bnkgqd,bskd->bnkgqs", qf, kb,
+                       preferred_element_type=jnp.float32)
+        mask = _pair_mask(qp, kpb[:, None], causal=causal, window=window)
+        s = jnp.where(mask[:, :, None, None], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])                 # (B,nq,Kv,G,QB,KB)
+        dp = jnp.einsum("bnkgqd,bskd->bnkgqs", dof, vb,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[..., None])
+        dq = dq + jnp.einsum("bnkgqs,bskd->bnkgqd", ds, kb,
+                             preferred_element_type=jnp.float32)
+        dk_b = jnp.einsum("bnkgqs,bnkgqd->bskd", ds, qf)
+        dv_b = jnp.einsum("bnkgqs,bnkgqd->bskd", p, dof)
+        return dq, (dk_b, dv_b)
+
+    dq0 = jnp.zeros_like(qf)
+    dq, (dks, dvs) = jax.lax.scan(kv_body, dq0, (kf, vf, kp))
+    dq = (_unblock_q(dq, B, Sq, H, Dh) * scale).astype(q.dtype)
+    dk = jnp.moveaxis(dks, 0, 1).reshape(B, Skv, Kv, Dh).astype(k.dtype)
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(B, Skv, Kv, Dh).astype(v.dtype)
+    return dq, dk, dv, None, None
+
+
+flash_attention.defvjp(_fwd, _bwd)

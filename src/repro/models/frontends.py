@@ -1,0 +1,148 @@
+"""Stub modality frontends (the one sanctioned carve-out, DESIGN.md §5).
+
+The audio (HuBERT) conv feature extractor and the VLM (Qwen2-VL) ViT encoder
+are NOT implemented; these stubs produce frame/patch embeddings with the
+correct shapes, dtypes and position semantics so the transformer backbone —
+which IS fully implemented — consumes exactly what the real frontend would
+hand it.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import Batch
+
+
+# ----------------------------------------------------------------------------
+# audio (HuBERT): 20 ms frames -> frame embeddings + masked-prediction targets
+# ----------------------------------------------------------------------------
+
+
+def hubert_batch(
+    key, cfg: ModelConfig, batch: int, frames: int, *, mask_prob: float = 0.08,
+    mask_span: int = 10,
+) -> Batch:
+    """Synthesizes a HuBERT masked-prediction training batch.
+
+    ``embeds`` stand in for the conv-feature-extractor output; ``targets``
+    are k-means cluster ids in [0, vocab); ``embed_mask`` marks masked frames
+    (loss is computed only there, mirroring HuBERT's masked loss)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    embeds = jax.random.normal(k1, (batch, frames, cfg.d_model)).astype(
+        jnp.dtype(cfg.dtype)
+    )
+    targets = jax.random.randint(k2, (batch, frames), 0, cfg.vocab_size)
+    # span masking: choose start frames, extend mask_span
+    starts = jax.random.bernoulli(k3, mask_prob, (batch, frames))
+    mask = jnp.zeros((batch, frames), bool)
+    for off in range(mask_span):
+        mask = mask | jnp.roll(starts, off, axis=1)
+    positions = jnp.broadcast_to(
+        jnp.arange(frames, dtype=jnp.int32)[None], (batch, frames)
+    )
+    return Batch(
+        tokens=None,
+        embeds=embeds,
+        embed_mask=mask,
+        positions=positions,
+        targets=targets,
+        loss_mask=mask.astype(jnp.float32),
+    )
+
+
+# ----------------------------------------------------------------------------
+# vision (Qwen2-VL): dynamic-resolution patches + M-RoPE position streams
+# ----------------------------------------------------------------------------
+
+
+def mrope_positions_for_image(
+    text_len_before: int, grid_h: int, grid_w: int, text_len_after: int
+) -> jnp.ndarray:
+    """Builds the (3, S) M-RoPE position streams for [text, image, text].
+
+    Text tokens advance all three streams together; image patches share one
+    temporal position while the h/w streams trace the patch grid — the
+    Qwen2-VL scheme."""
+    parts_t, parts_h, parts_w = [], [], []
+    t = jnp.arange(text_len_before, dtype=jnp.int32)
+    parts_t.append(t); parts_h.append(t); parts_w.append(t)
+    base = text_len_before
+    hh, ww = jnp.meshgrid(
+        jnp.arange(grid_h, dtype=jnp.int32),
+        jnp.arange(grid_w, dtype=jnp.int32),
+        indexing="ij",
+    )
+    n_img = grid_h * grid_w
+    parts_t.append(jnp.full((n_img,), base, jnp.int32))
+    parts_h.append(base + hh.reshape(-1))
+    parts_w.append(base + ww.reshape(-1))
+    after_start = base + max(grid_h, grid_w)
+    a = after_start + jnp.arange(text_len_after, dtype=jnp.int32)
+    parts_t.append(a); parts_h.append(a); parts_w.append(a)
+    return jnp.stack(
+        [jnp.concatenate(p) for p in (parts_t, parts_h, parts_w)]
+    )                                                      # (3, S)
+
+
+def vlm_batch(
+    key, cfg: ModelConfig, batch: int, seq: int, *, image_patches: int = 0,
+    grid: Tuple[int, int] = (0, 0),
+) -> Batch:
+    """Synthesizes a Qwen2-VL-style mixed text+image training batch.
+
+    ``embeds`` stand in for ViT->projector patch embeddings placed where
+    ``embed_mask`` is True; the rest are text tokens."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    dtype = jnp.dtype(cfg.dtype)
+    tokens = jax.random.randint(k1, (batch, seq), 0, cfg.vocab_size)
+    if image_patches:
+        gh, gw = grid
+        assert gh * gw == image_patches
+        text_before = max(1, (seq - image_patches) // 2)
+        text_after = seq - image_patches - text_before
+        pos = mrope_positions_for_image(text_before, gh, gw, text_after)
+        positions = jnp.broadcast_to(pos[:, None, :], (3, batch, seq))
+        emask = jnp.zeros((seq,), bool).at[
+            text_before : text_before + image_patches
+        ].set(True)
+        embed_mask = jnp.broadcast_to(emask[None], (batch, seq))
+        embeds = jax.random.normal(k2, (batch, seq, cfg.d_model)).astype(dtype)
+    else:
+        p = jnp.arange(seq, dtype=jnp.int32)
+        positions = jnp.broadcast_to(p[None, None], (3, batch, seq))
+        embed_mask = jnp.zeros((batch, seq), bool)
+        embeds = jnp.zeros((batch, seq, cfg.d_model), dtype)
+    targets = jnp.roll(tokens, -1, axis=1)
+    loss_mask = jnp.where(embed_mask, 0.0, 1.0)
+    return Batch(
+        tokens=tokens,
+        embeds=embeds,
+        embed_mask=embed_mask,
+        positions=positions,
+        targets=targets,
+        loss_mask=loss_mask,
+    )
+
+
+# ----------------------------------------------------------------------------
+# plain text LM batch (everything else)
+# ----------------------------------------------------------------------------
+
+
+def lm_batch(key, cfg: ModelConfig, batch: int, seq: int) -> Batch:
+    tokens = jax.random.randint(key, (batch, seq), 0, cfg.vocab_size)
+    positions = jnp.broadcast_to(
+        jnp.arange(seq, dtype=jnp.int32)[None], (batch, seq)
+    )
+    return Batch(
+        tokens=tokens,
+        embeds=None,
+        embed_mask=None,
+        positions=positions,
+        targets=jnp.roll(tokens, -1, axis=1),
+        loss_mask=jnp.ones((batch, seq), jnp.float32),
+    )

@@ -1,0 +1,196 @@
+"""Shared neural-net building blocks (pure JAX, no framework deps).
+
+Parameters are plain nested dicts of jnp arrays.  Every ``init_*`` takes a
+PRNG key and returns a pytree; every ``apply`` is a pure function.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+# ----------------------------------------------------------------------------
+# init helpers
+# ----------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim: int, out_dim: int, *, dtype, scale: float = 1.0):
+    std = scale / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim)) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, *, dtype):
+    return (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)
+
+
+# ----------------------------------------------------------------------------
+# norms
+# ----------------------------------------------------------------------------
+
+
+def init_norm(cfg: ModelConfig, dtype) -> dict:
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.norm == "layernorm":
+        return {
+            "scale": jnp.ones((cfg.d_model,), dtype),
+            "bias": jnp.zeros((cfg.d_model,), dtype),
+        }
+    if cfg.norm == "layernorm_np":  # OLMo non-parametric LN
+        return {}
+    raise ValueError(f"unknown norm {cfg.norm!r}")
+
+
+def apply_norm(params: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    eps = cfg.norm_eps
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+        return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+    # layernorm variants
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    if cfg.norm == "layernorm":
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(
+            jnp.float32
+        )
+    return y.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# activations
+# ----------------------------------------------------------------------------
+
+
+def act_fn(name: str):
+    if name in ("swiglu", "silu"):
+        return jax.nn.silu
+    if name in ("gelu", "geglu"):
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def is_gated(name: str) -> bool:
+    return name in ("swiglu", "geglu")
+
+
+# ----------------------------------------------------------------------------
+# dense MLP
+# ----------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig, dtype, d_ff: int = 0) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"down": dense_init(k2, d_ff, cfg.d_model, dtype=dtype)}
+    if is_gated(cfg.act):
+        p["gate"] = dense_init(k1, cfg.d_model, d_ff, dtype=dtype)
+        p["up"] = dense_init(k3, cfg.d_model, d_ff, dtype=dtype)
+    else:
+        p["up"] = dense_init(k1, cfg.d_model, d_ff, dtype=dtype)
+    if cfg.mlp_bias:
+        p["up_b"] = jnp.zeros((d_ff,), dtype)
+        p["down_b"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def apply_mlp(params: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    f = act_fn(cfg.act)
+    if is_gated(cfg.act):
+        h = f(x @ params["gate"]) * (x @ params["up"])
+    else:
+        h = x @ params["up"]
+        if "up_b" in params:
+            h = h + params["up_b"]
+        h = f(h)
+    y = h @ params["down"]
+    if "down_b" in params:
+        y = y + params["down_b"]
+    return y
+
+
+# ----------------------------------------------------------------------------
+# rotary embeddings (standard + M-RoPE)
+# ----------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(
+    x: jnp.ndarray,          # (B, S, H, Dh)
+    positions: jnp.ndarray,  # (B, S) int32
+    theta: float,
+) -> jnp.ndarray:
+    freqs = rope_frequencies(x.shape[-1], theta)           # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,Dh/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jnp.ndarray,          # (B, S, H, Dh)
+    positions: jnp.ndarray,  # (3, B, S) int32 — (t, h, w) streams
+    theta: float,
+    sections: Tuple[int, ...],
+) -> jnp.ndarray:
+    """Multimodal RoPE (Qwen2-VL): head_dim/2 frequency slots are partitioned
+    into (temporal, height, width) sections, each rotated by its own position
+    stream.  For pure-text tokens all three streams coincide and M-RoPE
+    reduces exactly to standard RoPE."""
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_frequencies(x.shape[-1], theta)            # (half,)
+    # Build the per-slot position by selecting the stream for each section.
+    stream_id = jnp.concatenate(
+        [jnp.full((n,), i, dtype=jnp.int32) for i, n in enumerate(sections)]
+    )                                                        # (half,)
+    # positions: (3,B,S) -> (B,S,half) selecting stream per slot
+    pos = jnp.take_along_axis(
+        jnp.moveaxis(positions, 0, -1),                      # (B,S,3)
+        stream_id[None, None, :],                            # (1,1,half)
+        axis=-1,
+    )                                                        # (B,S,half)
+    angles = pos.astype(jnp.float32) * freqs                 # (B,S,half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# conv positional embedding (HuBERT-style, grouped 1-D conv over time)
+# ----------------------------------------------------------------------------
+
+
+def init_conv_pos(key, cfg: ModelConfig, dtype, kernel: int = 31, groups: int = 16):
+    per_group = cfg.d_model // groups
+    w = jax.random.normal(key, (kernel, per_group, cfg.d_model)) * (
+        1.0 / math.sqrt(kernel * per_group)
+    )
+    return {"w": w.astype(dtype), "b": jnp.zeros((cfg.d_model,), dtype)}
+
+
+def apply_conv_pos(params: dict, x: jnp.ndarray, groups: int = 16) -> jnp.ndarray:
+    # x: (B, S, D); grouped conv over S with 'SAME' padding.
+    y = jax.lax.conv_general_dilated(
+        x,
+        params["w"],
+        window_strides=(1,),
+        padding="SAME",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=groups,
+    )
+    return jax.nn.gelu(y + params["b"], approximate=True)

@@ -1,0 +1,286 @@
+"""Mixture-of-Experts layer.
+
+Two implementations sharing one parameter layout:
+
+* ``moe_dense``           — reference: every expert computes every token,
+  combined with router weights.  Exact (no capacity dropping).  Used for
+  smoke tests / tiny expert counts and as the oracle for the expert-parallel
+  path.
+* ``moe_expert_parallel`` — production: ``shard_map`` over the mesh, tokens
+  sharded on the data axes, experts sharded on the model axis, with
+  capacity-based dispatch and two ``all_to_all`` collectives (the classic
+  expert-parallel schedule).  When the expert count E is smaller than the
+  model-axis size M, each expert is split into ``r = M // E`` *virtual
+  experts* that hold a 1/r slice of the FFN hidden dim — tokens are
+  dispatched to all r slices and the down-projection partial sums are added
+  on the way back (tensor parallelism inside the expert).  This keeps the
+  (16,16) production mesh fully used for Mixtral's 8 experts.
+
+Parameter layout (V = E * r virtual experts, F_v = moe_d_ff // r):
+  router:  (D, E)
+  gate,up: (V, D, F_v)
+  down:    (V, F_v, D)
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.layers import act_fn, dense_init, is_gated
+
+
+class MoEShardingCtx(NamedTuple):
+    """How the expert-parallel path should map onto the mesh."""
+
+    mesh: object                    # jax.sharding.Mesh
+    dp_axes: Tuple[str, ...]        # axes the batch is sharded over
+    model_axis: str                 # axis experts are sharded over
+    batch_sharded: bool = True      # False for global_batch=1 decode
+    # 2D expert parallelism: keep expert weights FSDP-sharded (Fv sliced over
+    # the data axes) inside the shard_map; all-gather the *token* buffers
+    # over data and reduce-scatter the partial outputs back.  Token buffers
+    # are ~7x smaller than Jamba's 19 GB/layer expert weights — this is the
+    # memory fix that makes jamba train_4k fit (EXPERIMENTS.md §Perf H3).
+    tp_over_dp: bool = False
+
+
+def virtual_factor(cfg: ModelConfig, model_axis_size: int) -> int:
+    """Replica factor r (1 when E >= M)."""
+    if cfg.num_experts >= model_axis_size:
+        if cfg.num_experts % model_axis_size:
+            raise ValueError(
+                f"num_experts={cfg.num_experts} not divisible by model axis "
+                f"{model_axis_size}"
+            )
+        return 1
+    if model_axis_size % cfg.num_experts:
+        raise ValueError(
+            f"model axis {model_axis_size} not divisible by "
+            f"num_experts={cfg.num_experts}"
+        )
+    return model_axis_size // cfg.num_experts
+
+
+def init_moe(key, cfg: ModelConfig, dtype, *, virtual_r: int = 1) -> dict:
+    E, D = cfg.num_experts, cfg.d_model
+    F = cfg.resolved_moe_d_ff
+    assert F % virtual_r == 0, (F, virtual_r)
+    V, Fv = E * virtual_r, F // virtual_r
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    std_in = 1.0 / math.sqrt(D)
+    std_out = 1.0 / math.sqrt(F)
+    p = {
+        "router": dense_init(kr, D, E, dtype=dtype),
+        "up": (jax.random.normal(ku, (V, D, Fv)) * std_in).astype(dtype),
+        "down": (jax.random.normal(kd, (V, Fv, D)) * std_out).astype(dtype),
+    }
+    if is_gated(cfg.act):
+        p["gate"] = (jax.random.normal(kg, (V, D, Fv)) * std_in).astype(dtype)
+    return p
+
+
+# ----------------------------------------------------------------------------
+# router
+# ----------------------------------------------------------------------------
+
+
+def route(params, x, cfg: ModelConfig):
+    """x: (T, D) -> (weights (T,k), ids (T,k), aux_loss scalar)."""
+    logits = (x.astype(jnp.float32)) @ params["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)              # (T, E)
+    w, ids = jax.lax.top_k(probs, cfg.num_experts_per_tok)
+    w = w / jnp.maximum(w.sum(axis=-1, keepdims=True), 1e-9)
+    # Switch-style load-balance auxiliary loss.
+    E = cfg.num_experts
+    me = probs.mean(axis=0)                              # mean router prob/exp
+    ce = jnp.zeros((E,), jnp.float32).at[ids.reshape(-1)].add(
+        1.0 / ids.size
+    )                                                    # fraction routed/exp
+    aux = E * jnp.sum(me * ce) * cfg.router_aux_loss_coef
+    return w, ids, aux
+
+
+def _expert_ffn(params, h, cfg: ModelConfig):
+    """h: (V_loc, T, D) grouped tokens; params already V_loc-local."""
+    f = act_fn(cfg.act)
+    up = jnp.einsum("etd,edf->etf", h, params["up"])
+    if "gate" in params:
+        g = jnp.einsum("etd,edf->etf", h, params["gate"])
+        hidden = f(g) * up
+    else:
+        hidden = f(up)
+    return jnp.einsum("etf,efd->etd", hidden, params["down"])
+
+
+# ----------------------------------------------------------------------------
+# dense reference
+# ----------------------------------------------------------------------------
+
+
+def moe_dense(params, x, cfg: ModelConfig):
+    """x: (B,S,D) -> (out, aux).  Computes all experts on all tokens."""
+    B, S, D = x.shape
+    xt = x.reshape(B * S, D)
+    w, ids, aux = route(params, xt, cfg)
+    V = params["up"].shape[0]
+    r = V // cfg.num_experts
+    h = jnp.broadcast_to(xt[None], (V, B * S, D))
+    y = _expert_ffn(params, h, cfg)                      # (V, T, D)
+    # combine: token t takes sum over k of w * sum over r slices
+    y = y.reshape(cfg.num_experts, r, B * S, D).sum(axis=1)   # (E, T, D)
+    gathered = jnp.take_along_axis(
+        jnp.moveaxis(y, 1, 0),                           # (T, E, D)
+        ids[..., None],
+        axis=1,
+    )                                                    # (T, k, D)
+    out = (gathered * w[..., None].astype(y.dtype)).sum(axis=1)
+    return out.reshape(B, S, D).astype(x.dtype), aux
+
+
+# ----------------------------------------------------------------------------
+# expert parallel (shard_map + all_to_all)
+# ----------------------------------------------------------------------------
+
+
+def _dispatch_positions(ids_flat: jnp.ndarray, E: int, C: int):
+    """Per-assignment slot within its expert's capacity buffer.
+
+    ids_flat: (A,) expert id per assignment.  Returns (pos (A,), keep (A,)).
+    Sort-based ranking — O(A) memory (a one-hot cumsum would materialize an
+    (A, E) intermediate, ~270 MB for the 128-expert 4k-train shape).
+    """
+    A = ids_flat.shape[0]
+    order = jnp.argsort(ids_flat, stable=True)                # (A,)
+    sorted_ids = ids_flat[order]
+    starts = jnp.searchsorted(sorted_ids, jnp.arange(E))      # (E,)
+    pos_sorted = jnp.arange(A) - starts[sorted_ids]
+    pos = jnp.zeros((A,), jnp.int32).at[order].set(pos_sorted.astype(jnp.int32))
+    keep = pos < C
+    return pos, keep
+
+
+def moe_expert_parallel(
+    params,
+    x,
+    cfg: ModelConfig,
+    ctx: MoEShardingCtx,
+):
+    """x: (B,S,D) -> (out, aux) using all_to_all expert parallelism."""
+    mesh = ctx.mesh
+    M = mesh.shape[ctx.model_axis]
+    r = virtual_factor(cfg, M)
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    V = E * r
+    per_shard_v = V // M
+
+    # Shard the sequence axis over the model axis too (when divisible): each
+    # model shard routes ONLY its token slice.  Without this every model
+    # shard routes the full per-data-shard token set — 16x redundant dispatch
+    # and expert FLOPs (observed in the first dry-run sweep).  The re-gather
+    # of (B,S/M,D) outputs on exit is the standard sequence-parallel MoE
+    # boundary cost.
+    S = x.shape[1]
+    seq_sharded = ctx.batch_sharded and S > 1 and S % M == 0
+    if seq_sharded:
+        x_spec = P(ctx.dp_axes, ctx.model_axis, None)
+    elif ctx.batch_sharded:
+        x_spec = P(ctx.dp_axes, None, None)
+    else:
+        x_spec = P(None, None, None)
+    # params: router replicated; expert weights sharded on V axis.
+    # tp_over_dp: the hidden (Fv) dim additionally stays sliced over the
+    # data axes inside the shard_map (no per-layer weight gather).
+    tp = ctx.tp_over_dp and ctx.batch_sharded
+    fv = ctx.dp_axes if tp else None
+    pspec = {
+        "router": P(None, None),
+        "up": P(ctx.model_axis, None, fv),
+        "down": P(ctx.model_axis, fv, None),
+    }
+    if "gate" in params:
+        pspec["gate"] = P(ctx.model_axis, None, fv)
+
+    def body(p, xl):
+        B_loc, S_loc, D = xl.shape
+        T = B_loc * S_loc
+        xt = xl.reshape(T, D)
+        w, ids, aux = route(p, xt, cfg)                   # (T,k),(T,k)
+        A = T * k
+        ids_f = ids.reshape(A)
+        w_f = w.reshape(A)
+        # capacity per (source shard, real expert)
+        C = max(1, int(math.ceil(A / E * cfg.moe_capacity_factor)))
+        pos, keep = _dispatch_positions(ids_f, E, C)
+        # send buffer (V, C, D): replica j of expert e is virtual expert e*r+j
+        src = jnp.repeat(xt, k, axis=0)                   # (A, D)
+        buf = jnp.zeros((V, C, D), xl.dtype)
+        for j in range(r):
+            ve = ids_f * r + j
+            buf = buf.at[
+                jnp.where(keep, ve, 0),
+                jnp.where(keep, pos, 0),
+            ].add(jnp.where(keep[:, None], src, 0))
+        # all_to_all over model axis: (V,C,D)->(M, pv, C, D) split/concat
+        buf = buf.reshape(M, per_shard_v, C, D)
+        recv = jax.lax.all_to_all(
+            buf, ctx.model_axis, split_axis=0, concat_axis=0, tiled=False
+        )                                                 # (M, pv, C, D)
+        recv = recv.transpose(1, 0, 2, 3).reshape(per_shard_v, M * C, D)
+        if tp:
+            # 2D EP: gather every data shard's expert tokens, compute with
+            # the local Fv slice, reduce-scatter partial outputs back.
+            ndp = 1
+            for a in ctx.dp_axes:
+                ndp *= mesh.shape[a]
+            recv_all = jax.lax.all_gather(
+                recv, ctx.dp_axes, axis=1, tiled=True
+            )                                             # (pv, ndp*M*C, D)
+            out_all = _expert_ffn(p, recv_all, cfg)       # partial over Fv
+            out_e = jax.lax.psum_scatter(
+                out_all, ctx.dp_axes, scatter_dimension=1, tiled=True
+            )                                             # (pv, M*C, D)
+        else:
+            out_e = _expert_ffn(p, recv, cfg)             # (pv, M*C, D)
+        out_e = out_e.reshape(per_shard_v, M, C, D).transpose(1, 0, 2, 3)
+        back = jax.lax.all_to_all(
+            out_e, ctx.model_axis, split_axis=0, concat_axis=0, tiled=False
+        )                                                 # (M, pv, C, D)
+        back = back.reshape(V, C, D)
+        # gather + combine replicas and top-k
+        y = jnp.zeros((A, D), jnp.float32)
+        for j in range(r):
+            ve = ids_f * r + j
+            y = y + jnp.where(
+                keep[:, None], back[ve, pos].astype(jnp.float32), 0.0
+            )
+        y = (y * w_f[:, None]).reshape(T, k, D).sum(axis=1)
+        # aux loss averaged over data shards happens outside (scalar psum-mean
+        # via replicated output would need collective; return local aux).
+        if ctx.batch_sharded:
+            axes = ctx.dp_axes + ((ctx.model_axis,) if seq_sharded else ())
+            aux = jax.lax.pmean(aux, axes)
+        return y.reshape(B_loc, S_loc, D).astype(xl.dtype), aux
+
+    out, aux = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(pspec, x_spec),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )(params, x)
+    return out, aux
+
+
+def apply_moe(params, x, cfg: ModelConfig, ctx: Optional[MoEShardingCtx]):
+    impl = cfg.moe_impl
+    if impl == "auto":
+        impl = "expert_parallel" if ctx is not None else "dense"
+    if impl == "expert_parallel":
+        assert ctx is not None, "expert_parallel MoE requires a sharding ctx"
+        return moe_expert_parallel(params, x, cfg, ctx)
+    return moe_dense(params, x, cfg)

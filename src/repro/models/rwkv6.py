@@ -1,0 +1,263 @@
+"""RWKV-6 "Finch" time-mix (data-dependent decay) and channel-mix.
+
+TPU adaptation (DESIGN.md §4): instead of the token-sequential CUDA WKV
+kernel, training/prefill use a *chunked* linear-attention form — within a
+chunk of L tokens the recurrence is expressed as masked (L, L) matmuls with
+log-space cumulative decay (MXU-friendly); across chunks a ``lax.scan``
+carries the (H, dh, dh) state.  Decode is the exact single-step recurrence.
+
+Recurrence (per head, dh-dim r/k/v, state S in R^{dh x dh}):
+    y_t = r_t @ (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+with per-channel data-dependent decay w_t in (0,1).
+
+Log-decay differences are clamped to [-LOG_CLAMP, 0] before exponentiation —
+a contribution decayed by e^-30 is numerically zero, so the clamp changes
+nothing while preventing overflow of the 1/prod(w) ratio trick.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+
+CHUNK = 64
+LOG_CLAMP = 30.0
+
+N_SHIFT = 5  # r, k, v, g, w token-shift interpolants
+
+
+def init_rwkv_time_mix(key, cfg: ModelConfig, dtype) -> dict:
+    D = cfg.d_model
+    dh = cfg.rwkv_head_dim
+    H = D // dh
+    L1 = cfg.rwkv_lora_mix
+    L2 = cfg.rwkv_lora_decay
+    ks = jax.random.split(key, 12)
+    return {
+        # token-shift interpolation: base mus + DDLoRA producing 5 deltas
+        "mu_base": jnp.full((D,), 0.5, dtype),
+        "mu": jnp.full((N_SHIFT, D), 0.5, dtype),
+        "mix_w1": dense_init(ks[0], D, N_SHIFT * L1, dtype=dtype),
+        "mix_w2": (
+            jax.random.normal(ks[1], (N_SHIFT, L1, D)) / math.sqrt(L1)
+        ).astype(dtype),
+        # projections
+        "wr": dense_init(ks[2], D, D, dtype=dtype),
+        "wk": dense_init(ks[3], D, D, dtype=dtype),
+        "wv": dense_init(ks[4], D, D, dtype=dtype),
+        "wg": dense_init(ks[5], D, D, dtype=dtype),
+        "wo": dense_init(ks[6], D, D, dtype=dtype),
+        # data-dependent decay DDLoRA
+        "w0": jnp.full((D,), -4.0, dtype),
+        "decay_w1": dense_init(ks[7], D, L2, dtype=dtype),
+        "decay_w2": (jax.random.normal(ks[8], (L2, D)) / math.sqrt(L2)).astype(
+            dtype
+        ),
+        # per-channel bonus
+        "u": (jax.random.normal(ks[9], (D,)) * 0.1).astype(dtype),
+        # post-WKV group norm (one group per head)
+        "gn_scale": jnp.ones((D,), dtype),
+        "gn_bias": jnp.zeros((D,), dtype),
+    }
+
+
+def init_rwkv_channel_mix(key, cfg: ModelConfig, dtype) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((D,), 0.5, dtype),
+        "mu_r": jnp.full((D,), 0.5, dtype),
+        "wk": dense_init(k1, D, F, dtype=dtype),
+        "wv": dense_init(k2, F, D, dtype=dtype),
+        "wr": dense_init(k3, D, D, dtype=dtype),
+    }
+
+
+# ----------------------------------------------------------------------------
+# shared pieces
+# ----------------------------------------------------------------------------
+
+
+def _token_shift_vectors(params, x, x_prev):
+    """Compute the 5 interpolated inputs (r,k,v,g,w) for time mix.
+
+    x: (B,S,D); x_prev: (B,D) last token of the previous segment (zeros at
+    sequence start).  Returns (B,S,5,D)."""
+    B, S, D = x.shape
+    shifted = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+    sx = shifted - x                                       # (B,S,D)
+    xxx = x + sx * params["mu_base"]
+    hid = jnp.tanh(xxx @ params["mix_w1"]).reshape(B, S, N_SHIFT, -1)
+    delta = jnp.einsum("bsnl,nld->bsnd", hid, params["mix_w2"])
+    mix = params["mu"][None, None] + delta                 # (B,S,5,D)
+    return x[:, :, None, :] + sx[:, :, None, :] * mix
+
+
+def _decay_log(params, xw):
+    """log(w_t) in (-inf, 0): w = exp(-exp(w0 + lora(xw)))."""
+    lora = jnp.tanh(xw @ params["decay_w1"]) @ params["decay_w2"]
+    return -jnp.exp(
+        jnp.clip(params["w0"].astype(jnp.float32) + lora.astype(jnp.float32), -8.0, 8.0)
+    )
+
+
+def _group_norm(params, y, H):
+    """Per-head LayerNorm (GroupNorm with H groups)."""
+    B, S, D = y.shape
+    yh = y.reshape(B, S, H, D // H).astype(jnp.float32)
+    mean = yh.mean(axis=-1, keepdims=True)
+    var = yh.var(axis=-1, keepdims=True)
+    yh = (yh - mean) * jax.lax.rsqrt(var + 1e-5)
+    y = yh.reshape(B, S, D)
+    return (y * params["gn_scale"].astype(jnp.float32)
+            + params["gn_bias"].astype(jnp.float32))
+
+
+# ----------------------------------------------------------------------------
+# chunked WKV (training / prefill)
+# ----------------------------------------------------------------------------
+
+
+def _wkv_chunked(r, k, v, logw, u, state0):
+    """r,k,v: (B,S,H,dh); logw: (B,S,H,dh) (<=0); u: (H,dh);
+    state0: (B,H,dh,dh).  S % CHUNK == 0.  Returns (y (B,S,H,dh), state)."""
+    B, S, H, dh = r.shape
+    n = S // CHUNK
+
+    def chunk_body(state, inp):
+        rc, kc, vc, lwc = inp            # (B,L,H,dh) each
+        # inclusive cumulative log decay within the chunk
+        a_inc = jnp.cumsum(lwc, axis=1)                   # (B,L,H,dh)
+        a_exc = a_inc - lwc                               # sum_{s<t}
+        # state contribution: y_t += (r_t * exp(a_exc_t)) @ S
+        r_dec = rc * jnp.exp(jnp.maximum(a_exc, -LOG_CLAMP))
+        y_state = jnp.einsum("blhd,bhde->blhe", r_dec, state)
+        # intra-chunk scores: s_tj = sum_d r_td k_jd exp(a_exc_t - a_inc_j)
+        k_dec = kc * jnp.exp(jnp.maximum(-a_inc, -LOG_CLAMP))
+        scores = jnp.einsum("blhd,bmhd->bhlm", r_dec, k_dec)
+        tri = jnp.tril(jnp.ones((CHUNK, CHUNK), bool), k=-1)
+        scores = jnp.where(tri[None, None], scores, 0.0)
+        # diagonal bonus term: j == t
+        diag = jnp.einsum("blhd,blhd->blh", rc, u[None, None] * kc)
+        y_intra = jnp.einsum("bhlm,bmhe->blhe", scores, vc)
+        y_intra = y_intra + diag[..., None] * vc
+        # new state: S' = diag(exp(a_L)) S + sum_j (k_j exp(a_L - a_inc_j)) v_j^T
+        a_tot = a_inc[:, -1]                              # (B,H,dh)
+        k_tail = kc * jnp.exp(
+            jnp.maximum(a_tot[:, None] - a_inc, -LOG_CLAMP)
+        )
+        state_new = state * jnp.exp(jnp.maximum(a_tot, -LOG_CLAMP))[..., None]
+        state_new = state_new + jnp.einsum("blhd,blhe->bhde", k_tail, vc)
+        return state_new, y_state + y_intra
+
+    rs = r.reshape(B, n, CHUNK, H, dh).swapaxes(0, 1)
+    ks_ = k.reshape(B, n, CHUNK, H, dh).swapaxes(0, 1)
+    vs = v.reshape(B, n, CHUNK, H, dh).swapaxes(0, 1)
+    lws = logw.reshape(B, n, CHUNK, H, dh).swapaxes(0, 1)
+    state, ys = jax.lax.scan(chunk_body, state0, (rs, ks_, vs, lws))
+    y = ys.swapaxes(0, 1).reshape(B, S, H, dh)
+    return y, state
+
+
+def _wkv_step(r, k, v, logw, u, state):
+    """Exact single-token recurrence.  r,k,v,logw: (B,H,dh); state (B,H,dh,dh)."""
+    y = jnp.einsum("bhd,bhde->bhe", r, state)
+    kv = jnp.einsum("bhd,bhe->bhde", k, v)
+    y = y + jnp.einsum("bhd,bhde->bhe", r * u[None], kv)
+    state = state * jnp.exp(logw)[..., None] + kv
+    return y, state
+
+
+# ----------------------------------------------------------------------------
+# public API
+# ----------------------------------------------------------------------------
+
+
+def rwkv_time_mix_forward(params, x, cfg: ModelConfig, state=None):
+    """Full-sequence time mix.  x: (B,S,D).
+
+    state: None (fresh) or dict(shift (B,D), wkv (B,H,dh,dh)).
+    Returns (out, new_state)."""
+    B, S, D = x.shape
+    dh = cfg.rwkv_head_dim
+    H = D // dh
+    x_prev = state["shift"] if state else jnp.zeros((B, D), x.dtype)
+    wkv0 = (
+        state["wkv"]
+        if state
+        else jnp.zeros((B, H, dh, dh), jnp.float32)
+    )
+    xi = _token_shift_vectors(params, x, x_prev)          # (B,S,5,D)
+    xr, xk, xv, xg, xw = (xi[:, :, i] for i in range(N_SHIFT))
+    r = (xr @ params["wr"]).reshape(B, S, H, dh).astype(jnp.float32)
+    k = (xk @ params["wk"]).reshape(B, S, H, dh).astype(jnp.float32)
+    v = (xv @ params["wv"]).reshape(B, S, H, dh).astype(jnp.float32)
+    g = jax.nn.silu(xg @ params["wg"])
+    logw = _decay_log(params, xw).reshape(B, S, H, dh)
+    u = params["u"].astype(jnp.float32).reshape(H, dh)
+
+    pad = (-S) % CHUNK
+    if pad:
+        padf = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        y, wkv = _wkv_chunked(padf(r), padf(k), padf(v), padf(logw), u, wkv0)
+        y = y[:, :S]
+        # padded steps have k=v=0 and logw=0 -> state unchanged by padding
+    else:
+        y, wkv = _wkv_chunked(r, k, v, logw, u, wkv0)
+
+    y = _group_norm(params, y.reshape(B, S, D), H)
+    out = (y.astype(x.dtype) * g) @ params["wo"]
+    new_state = {"shift": x[:, -1, :], "wkv": wkv}
+    return out, new_state
+
+
+def rwkv_time_mix_step(params, x, cfg: ModelConfig, state):
+    """Single-token decode.  x: (B,1,D)."""
+    B, _, D = x.shape
+    dh = cfg.rwkv_head_dim
+    H = D // dh
+    xi = _token_shift_vectors(params, x, state["shift"])   # (B,1,5,D)
+    xr, xk, xv, xg, xw = (xi[:, 0, i] for i in range(N_SHIFT))
+    r = (xr @ params["wr"]).reshape(B, H, dh).astype(jnp.float32)
+    k = (xk @ params["wk"]).reshape(B, H, dh).astype(jnp.float32)
+    v = (xv @ params["wv"]).reshape(B, H, dh).astype(jnp.float32)
+    g = jax.nn.silu(xg @ params["wg"])
+    logw = _decay_log(params, xw).reshape(B, H, dh)
+    u = params["u"].astype(jnp.float32).reshape(H, dh)
+    y, wkv = _wkv_step(r, k, v, logw, u, state["wkv"])
+    y = _group_norm(params, y.reshape(B, 1, D), H)
+    out = (y.astype(x.dtype) * g[:, None, :].reshape(B, 1, D)) @ params["wo"]
+    return out, {"shift": x[:, -1, :], "wkv": wkv}
+
+
+def rwkv_channel_mix_forward(params, x, cfg: ModelConfig, state=None):
+    """x: (B,S,D) -> (out, new_state(shift))."""
+    B, S, D = x.shape
+    x_prev = state["shift"] if state else jnp.zeros((B, D), x.dtype)
+    shifted = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+    sx = shifted - x
+    xk = x + sx * params["mu_k"]
+    xr = x + sx * params["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ params["wk"]))
+    v = k @ params["wv"]
+    out = jax.nn.sigmoid(xr @ params["wr"]) * v
+    return out, {"shift": x[:, -1, :]}
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    D = cfg.d_model
+    dh = cfg.rwkv_head_dim
+    H = D // dh
+    return {
+        "tm": {
+            "shift": jnp.zeros((batch, D), dtype),
+            "wkv": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        },
+        "cm": {"shift": jnp.zeros((batch, D), dtype)},
+    }

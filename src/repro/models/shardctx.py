@@ -1,0 +1,84 @@
+"""ShardCtx: activation-sharding constraints + MoE mesh context, threaded
+through the model forward.
+
+Without explicit constraints GSPMD may resolve the FSDP-weight/batch-sharding
+conflict at the lm_head by all-gathering the *batch* (observed: 13 GB logits
+buffers with an unsharded 1M-token batch).  Pinning activations to
+P(dp, None, None) and logits to P(dp, None, model) makes it gather the small
+weight instead.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.moe import MoEShardingCtx
+
+
+class ShardCtx(NamedTuple):
+    mesh: object
+    moe: Optional[MoEShardingCtx] = None
+    act_spec: Optional[P] = None        # (B, S, D) activations
+    logits_spec: Optional[P] = None     # (B, S, V) logits
+    kv_spec: Optional[P] = None         # (B, S, Kv, Dh) attention K/V
+    q_spec: Optional[P] = None          # (B, S, H, Dh) — set iff H % mesh == 0
+    dp: Optional[tuple] = None          # data axes (None when batch unsharded)
+    model_axis: str = "model"
+    model_size: int = 1
+
+    def act(self, x):
+        if self.act_spec is None or x.ndim != 3:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.act_spec)
+        )
+
+    def logits(self, x):
+        if self.logits_spec is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.logits_spec)
+        )
+
+    def kv(self, x):
+        """Pin K/V before the blocked attention scan.  Without this, a
+        seq-sharded prefill-cache out-sharding propagates backward into the
+        scan and GSPMD computes every block rectangle redundantly on every
+        model shard (observed 16x attention FLOPs on Mixtral prefill)."""
+        if self.kv_spec is None or x.ndim != 4:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.kv_spec)
+        )
+
+    def q(self, x):
+        if self.q_spec is None or x.ndim != 4:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.q_spec)
+        )
+
+
+def make_shard_ctx(mesh, dp_axes, model_axis: str, *, batch_sharded: bool,
+                   moe: Optional[MoEShardingCtx] = None,
+                   num_kv_heads: int = 0, num_heads: int = 0,
+                   seq_parallel: bool = False,
+                   act_shard_d: bool = False) -> ShardCtx:
+    dp = dp_axes if batch_sharded else None
+    msize = mesh.shape[model_axis]
+    kv_heads_shardable = num_kv_heads > 0 and num_kv_heads % msize == 0
+    q_heads_shardable = num_heads > 0 and num_heads % msize == 0
+    return ShardCtx(
+        mesh=mesh,
+        moe=moe,
+        act_spec=P(dp, model_axis if seq_parallel else None,
+                   model_axis if act_shard_d and not seq_parallel else None),
+        logits_spec=P(dp, None, model_axis),
+        kv_spec=P(dp, None, model_axis if kv_heads_shardable else None, None),
+        q_spec=(P(dp, None, model_axis, None) if q_heads_shardable else None),
+        dp=dp,
+        model_axis=model_axis,
+        model_size=msize,
+    )

@@ -1,0 +1,11 @@
+from repro.optim.optimizers import Optimizer, adamw, sgd
+from repro.optim.schedule import constant, cosine_decay, linear_warmup_cosine
+
+__all__ = [
+    "Optimizer",
+    "adamw",
+    "sgd",
+    "constant",
+    "cosine_decay",
+    "linear_warmup_cosine",
+]

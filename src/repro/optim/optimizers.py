@@ -1,0 +1,111 @@
+"""Minimal pure-JAX optimizers (no optax dependency).
+
+``Optimizer.init(params) -> state``;
+``Optimizer.update(grads, state, params, step) -> (new_params, new_state)``.
+
+``moment_dtype`` lets giant models (Jamba-398B on the 16x16 mesh) keep Adam
+moments in bf16 — see EXPERIMENTS.md §Dry-run memory budgets.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params, step) -> (params, state)
+
+
+def _cast_like(tree, dtype):
+    if dtype is None:
+        return tree
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def sgd(lr: Callable | float, *, momentum: float = 0.0, nesterov: bool = False,
+        weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"mu": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+        if weight_decay:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads, params)
+        if momentum == 0.0:
+            new_params = jax.tree.map(lambda p, g: p - lr_t * g, params, grads)
+            return new_params, state
+        mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+        if nesterov:
+            upd = jax.tree.map(lambda g, m: g + momentum * m, grads, mu)
+        else:
+            upd = mu
+        new_params = jax.tree.map(lambda p, u: p - lr_t * u, params, upd)
+        return new_params, {"mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    lr: Callable | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    moment_dtype=None,
+    grad_clip_norm: float = 0.0,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, moment_dtype or p.dtype), params)
+        return {
+            "m": zeros,
+            "v": jax.tree.map(jnp.copy, zeros),
+        }
+
+    def update(grads, state, params, step):
+        step = jnp.asarray(step, jnp.int32)
+        if grad_clip_norm > 0:
+            gnorm = jnp.sqrt(
+                sum(
+                    jnp.sum(jnp.square(g.astype(jnp.float32)))
+                    for g in jax.tree.leaves(grads)
+                )
+            )
+            scale = jnp.minimum(1.0, grad_clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads)
+        m = jax.tree.map(
+            lambda mo, g: (b1 * mo.astype(jnp.float32)
+                           + (1 - b1) * g.astype(jnp.float32)).astype(mo.dtype),
+            state["m"], grads,
+        )
+        v = jax.tree.map(
+            lambda vo, g: (b2 * vo.astype(jnp.float32)
+                           + (1 - b2) * jnp.square(g.astype(jnp.float32))).astype(vo.dtype),
+            state["v"], grads,
+        )
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+        lr_t = lr_fn(step)
+
+        def upd(p, mo, vo):
+            mhat = mo.astype(jnp.float32) / bc1
+            vhat = vo.astype(jnp.float32) / bc2
+            u = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"m": m, "v": v}
+
+    return Optimizer(init, update)

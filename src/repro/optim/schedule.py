@@ -1,0 +1,29 @@
+"""Learning-rate schedules (pure functions of the step index)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_decay(lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.clip(jnp.asarray(step, jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1 - final_frac) * cos)
+
+    return fn
+
+
+def linear_warmup_cosine(lr: float, warmup: int, total_steps: int,
+                         final_frac: float = 0.1):
+    cos = cosine_decay(lr, max(total_steps - warmup, 1), final_frac)
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / max(warmup, 1)
+        return jnp.where(step < warmup, warm, cos(step - warmup))
+
+    return fn

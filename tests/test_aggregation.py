@@ -1,0 +1,100 @@
+"""Aggregation strategies + robustness properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import (
+    aggregate_pytrees,
+    apply_update,
+    cwmed,
+    fedavg,
+    flatten_updates,
+    trimmed_mean,
+)
+
+
+def rand_updates(k, seed=0):
+    key = jax.random.PRNGKey(seed)
+    return [
+        {"a": jax.random.normal(jax.random.fold_in(key, i), (8, 8)),
+         "b": jax.random.normal(jax.random.fold_in(key, 100 + i), (5,))}
+        for i in range(k)
+    ]
+
+
+def test_fedavg_weighted_mean():
+    ups = rand_updates(4)
+    stack, unravel = flatten_updates(ups)
+    w = jnp.array([1.0, 1.0, 2.0, 0.0])
+    out = fedavg(stack, w)
+    expect = (stack[0] + stack[1] + 2 * stack[2]) / 4.0
+    np.testing.assert_allclose(out, expect, atol=1e-6)
+
+
+def test_cwmed_matches_numpy():
+    ups = rand_updates(5)
+    stack, _ = flatten_updates(ups)
+    np.testing.assert_allclose(
+        cwmed(stack), np.median(np.asarray(stack), axis=0), atol=1e-6
+    )
+
+
+def test_cwmed_robust_to_outlier():
+    """One poisoned update cannot push the median outside the honest range."""
+    ups = rand_updates(5)
+    stack, _ = flatten_updates(ups)
+    poisoned = stack.at[0].set(1e6)
+    med = cwmed(poisoned)
+    honest_lo = np.asarray(stack[1:]).min(axis=0)
+    honest_hi = np.asarray(stack[1:]).max(axis=0)
+    assert np.all(med >= honest_lo - 1e-6) and np.all(med <= honest_hi + 1e-6)
+
+
+def test_fedavg_not_robust():
+    ups = rand_updates(5)
+    stack, _ = flatten_updates(ups)
+    poisoned = stack.at[0].set(1e6)
+    out = fedavg(poisoned)
+    assert np.abs(np.asarray(out)).max() > 1e4  # poisoned mean explodes
+
+
+def test_trimmed_mean():
+    stack = jnp.array([[1.0, 5.0], [2.0, 6.0], [3.0, 7.0], [100.0, -100.0]])
+    out = trimmed_mean(stack, trim=1)
+    np.testing.assert_allclose(out, [2.5, 5.5])
+
+
+def test_aggregate_pytrees_roundtrip():
+    ups = rand_updates(3)
+    agg = aggregate_pytrees(ups, method="fedavg")
+    assert agg["a"].shape == (8, 8) and agg["b"].shape == (5,)
+    params = {"a": jnp.zeros((8, 8)), "b": jnp.zeros((5,))}
+    new = apply_update(params, agg, scale=2.0)
+    np.testing.assert_allclose(new["a"], 2 * agg["a"], atol=1e-6)
+
+
+@given(
+    k=st.integers(2, 9),
+    d=st.integers(1, 50),
+    use_weights=st.booleans(),
+)
+@settings(max_examples=25, deadline=None)
+def test_property_fedavg_convexity(k, d, use_weights):
+    """FedAvg output lies in the convex hull per coordinate."""
+    rng = np.random.default_rng(k * 100 + d)
+    stack = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    w = jnp.asarray(np.abs(rng.normal(size=k)) + 0.01) if use_weights else None
+    out = np.asarray(fedavg(stack, w))
+    lo, hi = np.asarray(stack).min(0), np.asarray(stack).max(0)
+    assert np.all(out >= lo - 1e-4) and np.all(out <= hi + 1e-4)
+
+
+@given(k=st.integers(2, 9), d=st.integers(1, 40))
+@settings(max_examples=25, deadline=None)
+def test_property_cwmed_permutation_invariant(k, d):
+    rng = np.random.default_rng(k * 7 + d)
+    stack = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    perm = rng.permutation(k)
+    np.testing.assert_allclose(cwmed(stack), cwmed(stack[perm]), atol=1e-6)

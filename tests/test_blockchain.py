@@ -1,0 +1,145 @@
+"""Chain storage pattern (paper §III.A) — unit + hypothesis property tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.blockchain import Chain, LayoutError, pytree_digest
+from repro.core.storage import OffChainStore
+
+
+def model(v=0.0):
+    return {"w": jnp.full((4, 4), v), "b": jnp.zeros((4,))}
+
+
+def update(v=1.0):
+    return {"w": jnp.full((4, 4), v * 0.1), "b": jnp.full((4,), v)}
+
+
+def run_rounds(chain: Chain, rounds: int):
+    for t in range(rounds):
+        for i in range(chain.k):
+            chain.append_update(update(i), uploader=i, score=0.5 + 0.01 * i)
+        chain.append_model(model(t + 1), t + 1)
+
+
+def test_layout_formula():
+    k = 3
+    chain = Chain(k)
+    chain.append_model(model(), 0)
+    run_rounds(chain, 2)
+    # model block of round t at height t*(k+1)
+    for t in range(3):
+        blk = chain.blocks[chain.model_index(t)]
+        assert blk.kind == "model" and blk.round == t
+    lo, hi = chain.update_index_range(0)
+    assert (lo, hi) == (1, 3)
+    for idx in range(lo, hi + 1):
+        assert chain.blocks[idx].kind == "update"
+
+
+def test_latest_model_o1():
+    chain = Chain(2)
+    chain.append_model(model(0), 0)
+    run_rounds(chain, 5)
+    t, m = chain.latest_model()
+    assert t == 5
+    assert float(m["w"][0, 0]) == 5.0
+
+
+def test_append_model_requires_k_updates():
+    chain = Chain(3)
+    chain.append_model(model(), 0)
+    chain.append_update(update(), 0, 0.5)
+    with pytest.raises(LayoutError):
+        chain.append_model(model(1), 1)
+
+
+def test_too_many_updates_rejected():
+    chain = Chain(2)
+    chain.append_model(model(), 0)
+    chain.append_update(update(), 0, 0.5)
+    chain.append_update(update(), 1, 0.5)
+    with pytest.raises(LayoutError):
+        chain.append_update(update(), 2, 0.5)
+
+
+def test_verify_detects_tamper():
+    chain = Chain(2)
+    chain.append_model(model(), 0)
+    run_rounds(chain, 2)
+    assert chain.verify()
+    # tamper with a stored update payload
+    chain.blocks[1].payload = update(99.0)
+    assert not chain.verify()
+
+
+def test_verify_detects_reorder():
+    chain = Chain(2)
+    chain.append_model(model(), 0)
+    run_rounds(chain, 2)
+    chain.blocks[1], chain.blocks[2] = chain.blocks[2], chain.blocks[1]
+    assert not chain.verify()
+
+
+def test_prune_keeps_latest_and_headers():
+    chain = Chain(2)
+    chain.append_model(model(), 0)
+    run_rounds(chain, 4)
+    before = chain.storage_bytes()
+    dropped = chain.prune(keep_rounds=1)
+    assert dropped > 0
+    assert chain.storage_bytes() < before
+    # latest model still there, historical payload gone
+    t, m = chain.latest_model()
+    assert t == 4
+    with pytest.raises(KeyError):
+        chain.model_at_round(0)
+    # hash chain still verifiable after pruning
+    assert chain.verify()
+
+
+def test_off_chain_store_roundtrip(tmp_path):
+    store = OffChainStore(str(tmp_path / "blobs"))
+    chain = Chain(2, off_chain_store=store)
+    chain.append_model(model(7.0), 0)
+    run_rounds(chain, 2)
+    # payloads live off-chain; block payloads are None
+    assert all(b.payload is None for b in chain.blocks)
+    t, m = chain.latest_model()
+    # content-addressed store dedupes identical payloads
+    unique = len({b.payload_digest for b in chain.blocks})
+    assert t == 2 and store.size() == unique
+    assert chain.model_at_round(0)["w"][0, 0] == 7.0
+
+
+def test_failback_to_historical_model():
+    chain = Chain(2)
+    chain.append_model(model(0), 0)
+    run_rounds(chain, 3)
+    # §IV.C: after an attack, any historical model is recoverable
+    m1 = chain.model_at_round(1)
+    assert float(m1["w"][0, 0]) == 1.0
+
+
+@given(k=st.integers(1, 6), rounds=st.integers(0, 6))
+@settings(max_examples=20, deadline=None)
+def test_property_chain_invariants(k, rounds):
+    chain = Chain(k)
+    chain.append_model(model(), 0)
+    run_rounds(chain, rounds)
+    assert chain.verify()
+    assert chain.height == (rounds) * (k + 1) + 1
+    assert chain.latest_model()[0] == rounds
+    # every model block index is a multiple of k+1
+    for blk in chain.blocks:
+        if blk.kind == "model":
+            assert blk.index % (k + 1) == 0
+
+
+def test_digest_sensitivity():
+    a = model(1.0)
+    b = model(1.0)
+    assert pytree_digest(a) == pytree_digest(b)
+    b["w"] = b["w"].at[0, 0].set(1.0001)
+    assert pytree_digest(a) != pytree_digest(b)

@@ -1,0 +1,114 @@
+"""Committee Consensus Mechanism (paper §III.B) + cost model (§V.A)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.consensus import CommitteeConsensus, consensus_cost
+from repro.core.election import BY_SCORE, MULTI_FACTOR, RANDOM, elect
+
+
+def make_consensus(scores_by_member, threshold=0.5):
+    return CommitteeConsensus(
+        list(scores_by_member.keys()),
+        score_fn=lambda m, upd: scores_by_member[m](upd),
+        accept_threshold=threshold,
+    )
+
+
+def test_median_scoring():
+    cc = CommitteeConsensus(
+        [0, 1, 2], score_fn=lambda m, u: {0: 0.2, 1: 0.9, 2: 0.4}[m]
+    )
+    rec = cc.validate(uploader=7, update="u")
+    assert rec.median_score == pytest.approx(0.4)
+
+
+def test_collusion_minority_cannot_inflate():
+    # 2 of 5 malicious members give 1.0; median stays at honest level
+    honest = 0.3
+    cc = CommitteeConsensus(
+        list(range(5)),
+        score_fn=lambda m, u: 1.0 if m < 2 else honest,
+    )
+    rec = cc.validate(0, "u")
+    assert rec.median_score == pytest.approx(honest)
+
+
+def test_collusion_majority_wins():
+    # the >M/2 condition of §IV.C: 3 of 5 colluding members control the median
+    cc = CommitteeConsensus(
+        list(range(5)), score_fn=lambda m, u: 1.0 if m < 3 else 0.0
+    )
+    assert cc.validate(0, "u").median_score == 1.0
+
+
+def test_relative_threshold_rejects_degraded():
+    scores = iter([0.8, 0.82, 0.1])
+    cc = CommitteeConsensus(
+        [0], score_fn=lambda m, u: next(scores), accept_threshold=0.5
+    )
+    assert cc.validate(0, "a").accepted
+    assert cc.validate(1, "b").accepted
+    assert not cc.validate(2, "c").accepted   # 0.1 < 0.5 * mean(0.8, 0.82)
+
+
+def test_stats_count_pq():
+    cc = CommitteeConsensus(list(range(4)), score_fn=lambda m, u: 0.5)
+    for i in range(6):
+        cc.validate(i, i)
+    assert cc.stats.validations == 24  # P * Q
+
+
+@given(P=st.integers(1, 500), Q=st.integers(1, 200))
+@settings(max_examples=50, deadline=None)
+def test_consensus_cost_always_cheaper(P, Q):
+    ccm, broadcast = consensus_cost(P, Q)
+    assert ccm == P * Q
+    assert broadcast == (P + Q) ** 2
+    assert ccm < broadcast  # P*Q < (P+Q)^2 always
+
+
+# ---------------------------------------------------------------------------
+# election (§IV.B)
+# ---------------------------------------------------------------------------
+
+
+def test_election_by_score_top():
+    rng = np.random.default_rng(0)
+    cand = {1: 0.5, 2: 0.9, 3: 0.7, 4: 0.1}
+    assert elect(BY_SCORE, rng, cand, 2) == [2, 3]
+
+
+def test_election_random_subset():
+    rng = np.random.default_rng(0)
+    cand = {i: 0.5 for i in range(10)}
+    chosen = elect(RANDOM, rng, cand, 4)
+    assert len(chosen) == 4 and set(chosen) <= set(cand)
+
+
+def test_election_multi_factor_balances():
+    rng = np.random.default_rng(0)
+    cand = {1: 1.0, 2: 0.9, 3: 0.1}
+    factors = {1: 0.0, 2: 1.0, 3: 1.0}
+    chosen = elect(MULTI_FACTOR, rng, cand, 1, factors=factors,
+                   score_weight=0.5)
+    assert chosen == [2]  # best combined score+factor
+
+
+def test_election_empty_candidates():
+    rng = np.random.default_rng(0)
+    assert elect(BY_SCORE, rng, {}, 3) == []
+
+
+@given(
+    n=st.integers(1, 30), m=st.integers(1, 10),
+    method=st.sampled_from([RANDOM, BY_SCORE]),
+)
+@settings(max_examples=30, deadline=None)
+def test_property_election_size_and_membership(n, m, method):
+    rng = np.random.default_rng(0)
+    cand = {i: float(i) / n for i in range(n)}
+    chosen = elect(method, rng, cand, m)
+    assert len(chosen) == min(m, n)
+    assert len(set(chosen)) == len(chosen)
+    assert set(chosen) <= set(cand)

@@ -1,0 +1,99 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+KS = (2, 3, 5, 8, 17)
+DS = (2048, 4096, 6144)          # block-aligned
+DS_RAGGED = (1, 100, 2049, 5000)  # need padding
+
+
+@pytest.mark.parametrize("K", KS)
+@pytest.mark.parametrize("D", DS + DS_RAGGED)
+def test_fedavg_agg_matches_ref(K, D):
+    key = jax.random.PRNGKey(K * 1000 + D)
+    stack = jax.random.normal(key, (K, D), jnp.float32)
+    w = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(1), (K,)))
+    np.testing.assert_allclose(
+        ops.fedavg_agg(stack, w), ref.fedavg_agg_ref(stack, w),
+        atol=1e-5, rtol=1e-5,
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fedavg_agg_dtypes(dtype):
+    stack = jax.random.normal(jax.random.PRNGKey(0), (4, 2048)).astype(dtype)
+    w = jnp.full((4,), 0.25, jnp.float32)
+    out = ops.fedavg_agg(stack, w)
+    assert out.dtype == jnp.float32
+    np.testing.assert_allclose(
+        out, ref.fedavg_agg_ref(stack, w), atol=2e-2,
+    )
+
+
+@pytest.mark.parametrize("K", KS)
+@pytest.mark.parametrize("D", (2048, 2049, 5000))
+def test_cwmed_matches_ref(K, D):
+    key = jax.random.PRNGKey(K + D)
+    stack = jax.random.normal(key, (K, D), jnp.float32)
+    np.testing.assert_allclose(
+        ops.cwmed(stack), ref.cwmed_ref(stack), atol=1e-6,
+    )
+
+
+def test_cwmed_sorting_network_handles_ties():
+    stack = jnp.ones((6, 2048))
+    np.testing.assert_allclose(ops.cwmed(stack), jnp.ones(2048))
+
+
+@pytest.mark.parametrize("D", (2048, 4096, 5000, 100))
+def test_quantize_roundtrip(D):
+    x = jax.random.normal(jax.random.PRNGKey(D), (D,)) * 5
+    q, s, d = ops.quantize(x)
+    xq = ops.dequantize(q, s, d)
+    rel = float(jnp.abs(x - xq).max() / jnp.abs(x).max())
+    assert rel < 0.02
+
+
+def test_quantize_matches_ref():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4096,))
+    q, s, _ = ops.quantize(x)
+    qr, sr = ref.quantize_ref(x)
+    np.testing.assert_array_equal(q, qr)
+    np.testing.assert_allclose(s, sr, rtol=1e-6)
+    np.testing.assert_allclose(
+        ops.dequantize(q, s, 4096), ref.dequantize_ref(qr, sr), atol=1e-6
+    )
+
+
+def test_quantize_pytree_roundtrip():
+    tree = {"a": jax.random.normal(jax.random.PRNGKey(1), (33, 77)),
+            "b": {"c": jnp.linspace(-2, 2, 101)}}
+    blob, unravel = ops.quantize_pytree(tree)
+    out = ops.dequantize_pytree(blob, unravel)
+    for k in ("a",):
+        np.testing.assert_allclose(out[k], tree[k], atol=0.1)
+    assert blob["q"].dtype == jnp.int8
+
+
+@given(
+    k=st.integers(2, 12),
+    logd=st.integers(5, 12),
+)
+@settings(max_examples=15, deadline=None)
+def test_property_kernel_vs_oracle(k, logd):
+    d = 2 ** logd
+    key = jax.random.PRNGKey(k * 31 + logd)
+    stack = jax.random.normal(key, (k, d), jnp.float32)
+    w = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(7), (k,)))
+    np.testing.assert_allclose(
+        ops.fedavg_agg(stack, w), ref.fedavg_agg_ref(stack, w), atol=1e-5
+    )
+    np.testing.assert_allclose(
+        ops.cwmed(stack), ref.cwmed_ref(stack), atol=1e-6
+    )

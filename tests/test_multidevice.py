@@ -1,0 +1,148 @@
+"""Multi-device tests (EP-MoE equivalence, sharding specs, committee-weighted
+train step) — run in a subprocess with 8 fake host devices so the rest of the
+suite keeps seeing the single real CPU device."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_with_devices(code: str, n: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def test_moe_expert_parallel_equals_dense():
+    run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.models.config import ModelConfig, moe_unit
+        from repro.models.moe import (MoEShardingCtx, init_moe, moe_dense,
+                                      moe_expert_parallel)
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        cfg = ModelConfig(name="t", arch_type="moe", d_model=32, vocab_size=97,
+                          unit=moe_unit(1), num_units=1, num_heads=4,
+                          num_kv_heads=4, d_ff=64, num_experts=8,
+                          num_experts_per_tok=2, moe_d_ff=48,
+                          moe_capacity_factor=8.0)
+        p = init_moe(jax.random.PRNGKey(1), cfg, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(2), (4, 8, 32))
+        ref, _ = moe_dense(p, x, cfg)
+        ctx = MoEShardingCtx(mesh=mesh, dp_axes=("data",), model_axis="model")
+        out, _ = jax.jit(lambda p_, x_: moe_expert_parallel(p_, x_, cfg, ctx))(p, x)
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(out), atol=1e-4)
+        # virtual experts: E=2 < M=4
+        cfg2 = cfg.replace(num_experts=2, num_experts_per_tok=1)
+        p2 = init_moe(jax.random.PRNGKey(3), cfg2, jnp.float32, virtual_r=2)
+        ref2, _ = moe_dense(p2, x, cfg2)
+        out2, _ = jax.jit(lambda p_, x_: moe_expert_parallel(p_, x_, cfg2, ctx))(p2, x)
+        np.testing.assert_allclose(np.asarray(ref2), np.asarray(out2), atol=1e-4)
+        print("EP OK")
+    """)
+
+
+def test_sharded_train_step_runs_and_matches_single_device():
+    run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import registry
+        from repro.launch.mesh import make_host_mesh
+        from repro.launch.shardings import (ShardingPolicy, batch_pspecs,
+                                            named, param_pspecs)
+        from repro.launch.steps import TrainState, make_train_step
+        from repro.models import init_model
+        from repro.models.frontends import lm_batch
+        from repro.optim import sgd
+
+        cfg = registry.smoke_config("olmo-1b")
+        mesh = make_host_mesh(2, 4)
+        pol = ShardingPolicy(dp_axes=("data",), dp_sizes=(2,), model_axis_size=4)
+        params = init_model(jax.random.PRNGKey(0), cfg)
+        opt = sgd(0.1)
+        batch = lm_batch(jax.random.PRNGKey(1), cfg, 4, 16)
+
+        step = make_train_step(cfg, opt, mesh, pol, mode="standard")
+        pspecs = param_pspecs(cfg, params, pol)
+        st_sh = TrainState(named(mesh, pspecs), {},
+                           jax.NamedSharding(mesh, jax.sharding.PartitionSpec()))
+        jstep = jax.jit(step, in_shardings=(st_sh, named(mesh,
+                        batch_pspecs(cfg, pol, batch_sharded=True)), None))
+        state = TrainState(params, opt.init(params), jnp.zeros((), jnp.int32))
+        new_state, m = jstep(state, batch, None)
+        sharded_loss = float(m["loss"])
+
+        # single-device reference
+        mesh1 = make_host_mesh(1, 1)
+        pol1 = ShardingPolicy(dp_axes=("data",), model_axis_size=1, fsdp=False)
+        step1 = make_train_step(cfg, opt, mesh1, pol1, mode="standard")
+        _, m1 = jax.jit(step1)(state, batch, None)
+        assert abs(sharded_loss - float(m1["loss"])) < 1e-3, (sharded_loss, float(m1["loss"]))
+        print("TRAIN STEP OK", sharded_loss)
+    """)
+
+
+def test_bflc_mode_train_step_downweights_poisoned_cohort():
+    run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import registry
+        from repro.launch.mesh import make_host_mesh
+        from repro.launch.shardings import ShardingPolicy
+        from repro.launch.steps import TrainState, make_train_step, bflc_loss, make_moe_ctx
+        from repro.models import init_model
+        from repro.models.frontends import lm_batch
+        from repro.optim import sgd
+
+        cfg = registry.smoke_config("olmo-1b")
+        mesh = make_host_mesh(2, 4)
+        pol = ShardingPolicy(dp_axes=("data",), dp_sizes=(2,), model_axis_size=4)
+        params = init_model(jax.random.PRNGKey(0), cfg)
+        batch = lm_batch(jax.random.PRNGKey(1), cfg, 8, 16)
+        # poison cohort 0: random targets -> anomalous cohort loss
+        tgts = batch.targets.at[0:2].set(
+            jax.random.randint(jax.random.PRNGKey(9), (2, 16), 0, cfg.vocab_size))
+        batch = batch._replace(targets=tgts)
+        val = lm_batch(jax.random.PRNGKey(2), cfg, 4, 16)
+        ctx = make_moe_ctx(cfg, mesh, pol, batch_sharded=True)
+        total, ce = bflc_loss(params, cfg, batch, val, ctx,
+                              num_cohorts=4, committee_size=4)
+        assert np.isfinite(float(total))
+        print("BFLC STEP OK", float(total))
+    """)
+
+
+def test_decode_step_sharded():
+    run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import registry
+        from repro.launch.mesh import make_host_mesh
+        from repro.launch.shardings import (ShardingPolicy, cache_pspecs, named)
+        from repro.launch.steps import make_decode_step, make_prefill_step
+        from repro.models import init_cache, init_model
+        from repro.models.frontends import lm_batch
+
+        cfg = registry.smoke_config("mixtral-8x7b")
+        mesh = make_host_mesh(2, 4)
+        pol = ShardingPolicy(dp_axes=("data",), dp_sizes=(2,), model_axis_size=4, fsdp=False)
+        params = init_model(jax.random.PRNGKey(0), cfg, virtual_r=1)
+        B, S = 4, 16
+        batch = lm_batch(jax.random.PRNGKey(1), cfg, B, S)
+        prefill = jax.jit(make_prefill_step(cfg, mesh, pol, max_len=S + 4))
+        logits, cache = prefill(params, batch)
+        decode = jax.jit(make_decode_step(cfg, mesh, pol))
+        tok = jnp.ones((B, 1), jnp.int32)
+        pos = jnp.full((B,), S, jnp.int32)
+        nt, lg, cache2 = decode(params, tok, pos, cache, None)
+        assert nt.shape == (B, 1)
+        assert not np.isnan(np.asarray(lg, np.float32)).any()
+        print("DECODE OK")
+    """)

@@ -1,0 +1,63 @@
+"""Hypergeometric attack analysis (paper §IV.C, Fig. 3)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.security import attack_success_probability, fig3_grid
+
+
+def test_zero_when_no_malicious():
+    assert attack_success_probability(1000, 0.1, 0.0) == 0.0
+
+
+def test_one_when_all_malicious():
+    assert attack_success_probability(1000, 0.1, 1.0) == pytest.approx(1.0)
+
+
+def test_paper_51_percent_claim():
+    """Fig. 3: 'only when the malicious percentage greater than 50%, the
+    attack success probability could be greater than 0 markedly'."""
+    A = 1000
+    for p in (0.05, 0.1, 0.3):
+        assert attack_success_probability(A, p, 0.3) < 1e-3
+        assert attack_success_probability(A, p, 0.45) < 0.2
+        assert attack_success_probability(A, p, 0.60) > 0.8
+
+
+def test_majority_threshold_is_half_committee():
+    # tiny exact case: A=4, committee=2, malicious=2 -> need BOTH seats
+    # P[X=2] = C(2,2)C(2,0)/C(4,2) = 1/6
+    assert attack_success_probability(4, 0.5, 0.5) == pytest.approx(1 / 6)
+
+
+@given(
+    q1=st.floats(0.05, 0.45), q2=st.floats(0.5, 0.95),
+    p=st.floats(0.05, 0.4),
+)
+@settings(max_examples=30, deadline=None)
+def test_property_monotone_in_q(q1, q2, p):
+    A = 500
+    assert attack_success_probability(A, p, q1) <= \
+        attack_success_probability(A, p, q2) + 1e-12
+
+
+@given(p=st.floats(0.02, 0.5), q=st.floats(0.0, 1.0))
+@settings(max_examples=50, deadline=None)
+def test_property_valid_probability(p, q):
+    v = attack_success_probability(300, p, q)
+    assert -1e-12 <= v <= 1 + 1e-9
+
+
+def test_larger_committee_reduces_variance():
+    """At q just under 1/2, bigger committees suppress attack probability
+    (concentration) — the paper's motivation for election by score."""
+    A = 1000
+    small = attack_success_probability(A, 0.02, 0.45)
+    large = attack_success_probability(A, 0.4, 0.45)
+    assert large < small
+
+
+def test_fig3_grid_shape():
+    g = fig3_grid(A=200, ps=np.array([0.1, 0.2]), qs=np.array([0.2, 0.5, 0.8]))
+    assert g["prob"].shape == (2, 3)
+    assert np.all(np.diff(g["prob"], axis=1) >= -1e-9)  # monotone in q

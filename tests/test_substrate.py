@@ -1,0 +1,112 @@
+"""Optimizer, schedules, checkpoint, data pipeline."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.data import dirichlet_partition, leaf_style_partition, make_femnist_like
+from repro.data.lm_synthetic import MarkovLM
+from repro.optim import adamw, constant, cosine_decay, linear_warmup_cosine, sgd
+
+
+def quad_loss(p):
+    return jnp.sum((p["x"] - 3.0) ** 2) + jnp.sum((p["y"] + 1.0) ** 2)
+
+
+@pytest.mark.parametrize("opt", [
+    sgd(0.1), sgd(0.05, momentum=0.9), adamw(0.1),
+    adamw(0.1, moment_dtype=jnp.bfloat16),
+])
+def test_optimizers_converge(opt):
+    params = {"x": jnp.zeros((3,)), "y": jnp.ones((2,))}
+    state = opt.init(params)
+    for step in range(300):
+        g = jax.grad(quad_loss)(params)
+        params, state = opt.update(g, state, params, step)
+    assert quad_loss(params) < 1e-2
+
+
+def test_adamw_grad_clip():
+    opt = adamw(0.1, grad_clip_norm=1.0)
+    params = {"x": jnp.zeros((3,))}
+    state = opt.init(params)
+    g = {"x": jnp.full((3,), 1e6)}
+    new, _ = opt.update(g, state, params, 0)
+    assert float(jnp.abs(new["x"]).max()) < 1.0
+
+
+def test_schedules():
+    assert float(constant(0.1)(5)) == pytest.approx(0.1)
+    cd = cosine_decay(1.0, 100, final_frac=0.1)
+    assert float(cd(0)) == pytest.approx(1.0)
+    assert float(cd(100)) == pytest.approx(0.1, abs=1e-6)
+    wc = linear_warmup_cosine(1.0, 10, 100)
+    assert float(wc(5)) == pytest.approx(0.5)
+    assert float(wc(10)) == pytest.approx(1.0, rel=1e-2)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "b": {"c": jnp.ones((2,), jnp.bfloat16), "d": None},
+        "e": (jnp.zeros((1,)), jnp.array(3, jnp.int32)),
+    }
+    path = str(tmp_path / "ckpt.msgpack")
+    save_pytree(path, tree)
+    out = load_pytree(path)
+    assert out["b"]["d"] is None
+    np.testing.assert_array_equal(out["a"], tree["a"])
+    assert out["b"]["c"].dtype == jnp.bfloat16
+    assert isinstance(out["e"], tuple)
+    out2 = load_pytree(path, like=tree)
+    np.testing.assert_array_equal(out2["e"][1], 3)
+
+
+def test_femnist_like_stats():
+    ds = make_femnist_like(num_clients=30, mean_samples=50, test_size=300,
+                           seed=0, classes_per_client=6)
+    assert ds.num_clients == 30
+    assert ds.test_images.shape == (300, 28, 28, 1)
+    # non-IID: each client sees few classes
+    for lbl in ds.client_labels[:10]:
+        assert len(np.unique(lbl)) <= 6
+    # unbalanced sizes
+    sizes = ds.client_sizes()
+    assert sizes.min() >= 8 and sizes.std() > 5
+    merged_x, merged_y = ds.merged_train()
+    assert len(merged_x) == sizes.sum()
+
+
+@given(alpha=st.floats(0.1, 10.0), clients=st.integers(2, 12))
+@settings(max_examples=10, deadline=None)
+def test_property_dirichlet_partition_covers(alpha, clients):
+    labels = np.repeat(np.arange(5), 40)
+    parts = dirichlet_partition(labels, clients, alpha, seed=1)
+    all_idx = np.concatenate(parts)
+    assert len(all_idx) == len(labels)
+    assert len(np.unique(all_idx)) == len(labels)  # partition, no overlap
+
+
+def test_leaf_partition_class_limit():
+    labels = np.repeat(np.arange(10), 30)
+    parts = leaf_style_partition(labels, 6, classes_per_client=3, seed=0)
+    for p in parts:
+        assert len(np.unique(labels[p])) <= 3
+
+
+def test_markov_lm_learnable_structure():
+    lm = MarkovLM(128, branching=4, seed=0)
+    rng = np.random.default_rng(0)
+    toks, tgts = lm.batch(rng, 4, 64)
+    assert toks.shape == (4, 64)
+    # every target is a legal successor of its token
+    legal = 0
+    for b in range(4):
+        for t in range(64):
+            legal += tgts[b, t] in lm.succ[toks[b, t]]
+    assert legal == 4 * 64
+    assert lm.entropy() < np.log(128)
