@@ -1,12 +1,36 @@
 """Pallas kernel microbenchmarks (interpret mode on CPU: correctness-scale
-numbers; the BlockSpec tiling is the TPU deliverable)."""
+numbers; the BlockSpec tiling is the TPU deliverable).
+
+The fused-vs-staged rows model HBM traffic analytically (bytes column):
+interpret-mode wall-clock is launch-overhead-dominated, so the byte model
+is the number that predicts TPU behavior — fused reads the int8 stack once
+and writes one tile, staged pays ~3 extra f32 passes over (K, D).
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_us
+from repro import kernels
 from repro.kernels import ops, ref
+
+
+def _staged_bytes(K: int, dpad: int, nblk: int) -> int:
+    """dequant (int8 read, f32 write) -> agg (f32 read, f32 write)
+    -> quant (f32 read, int8+scales write)."""
+    return (K * dpad + K * nblk * 4          # int8 stack + scales read
+            + K * dpad * 4                   # f32 stack write
+            + K * dpad * 4                   # f32 stack read
+            + dpad * 4                       # f32 result write
+            + dpad * 4                       # f32 result read
+            + dpad + nblk * 4)               # int8 result + scales write
+
+
+def _fused_bytes(K: int, dpad: int, nblk: int) -> int:
+    """one int8 read of the stack + one int8 write of the result."""
+    return (K * dpad + K * nblk * 4          # int8 stack + scales read
+            + dpad + nblk * 4)               # int8 result + scales write
 
 
 def run(full: bool = False):
@@ -15,18 +39,62 @@ def run(full: bool = False):
         stack = jax.random.normal(jax.random.PRNGKey(0), (K, D), jnp.float32)
         w = jnp.full((K,), 1.0 / K)
         x = stack[0]
+        dpad = kernels.padded_dim(D)
+        nblk = dpad // kernels.BLOCK_D
 
         us = time_us(lambda: ops.fedavg_agg(stack, w), iters=3)
         us_ref = time_us(lambda: ref.fedavg_agg_ref(stack, w), iters=3)
-        emit(f"fedavg_agg_K{K}_D{D}", us, f"ref_us={us_ref:.1f}")
+        emit(f"fedavg_agg_K{K}_D{D}", us, f"ref_us={us_ref:.1f}",
+             nbytes=K * dpad * 4 + dpad * 4)
 
         us = time_us(lambda: ops.cwmed(stack), iters=3)
         us_ref = time_us(lambda: ref.cwmed_ref(stack), iters=3)
-        emit(f"cwmed_K{K}_D{D}", us, f"ref_us={us_ref:.1f}")
+        emit(f"cwmed_K{K}_D{D}", us, f"ref_us={us_ref:.1f}",
+             nbytes=K * dpad * 4 + dpad * 4)
 
+        us = time_us(lambda: ops.trimmed_mean(stack, trim=1), iters=3)
+        us_ref = time_us(lambda: ref.trimmed_mean_ref(stack, 1), iters=3)
+        emit(f"trimmed_mean_K{K}_D{D}", us, f"ref_us={us_ref:.1f}",
+             nbytes=K * dpad * 4 + dpad * 4)
+
+        # quantize codec: f32 (4*D) -> int8 (dpad) + f32 scale per tile
         us = time_us(lambda: ops.quantize(x), iters=3)
+        q_bytes = dpad + 4 * nblk
         emit(f"quantize_D{D}", us,
-             f"bytes_saved={(x.nbytes - D - 4*(D//2048))/x.nbytes:.2f}")
+             f"bytes_saved={(x.nbytes - q_bytes) / x.nbytes:.2f}",
+             nbytes=q_bytes)
+
+        # fused one-pass int8 aggregation vs the staged pipeline it replaces
+        q, s, d = ops.quantize_stack(stack)
+
+        def staged():
+            f32 = jnp.stack([ops.dequantize(q[i], s[i], d) for i in range(K)])
+            out = ops.fedavg_agg(f32, w)
+            return ops.quantize(out)
+
+        def fused():
+            return ops.aggregate_quantized(
+                q, s, d, method="fedavg", weights=w, quantize_out=True
+            )
+
+        us_staged = time_us(staged, iters=3)
+        us_fused = time_us(fused, iters=3)
+        sb, fb = _staged_bytes(K, dpad, nblk), _fused_bytes(K, dpad, nblk)
+        emit(f"staged_deq_fedavg_quant_K{K}_D{D}", us_staged,
+             f"hbm_bytes={sb}", nbytes=sb)
+        emit(f"fused_int8_fedavg_K{K}_D{D}", us_fused,
+             f"hbm_bytes={fb} vs_staged={us_fused / max(us_staged, 1e-9):.2f}x "
+             f"bytes_ratio={fb / sb:.3f}", nbytes=fb)
+
+        for method in ("cwmed", "trimmed_mean"):
+            us = time_us(
+                lambda m=method: ops.aggregate_quantized(
+                    q, s, d, method=m, weights=w, quantize_out=True
+                ),
+                iters=3,
+            )
+            emit(f"fused_int8_{method}_K{K}_D{D}", us,
+                 f"hbm_bytes={fb}", nbytes=fb)
 
 
 if __name__ == "__main__":

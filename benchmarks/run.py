@@ -1,15 +1,20 @@
 """Benchmark harness entry: one function per paper table/figure + systems
-benchmarks.  Prints ``name,us_per_call,derived`` CSV lines.
+benchmarks.  Prints ``name,us_per_call,derived`` CSV lines and writes the
+kernel rows to ``BENCH_kernels.json`` (name -> {us, bytes}) so the perf
+trajectory is machine-trackable across PRs.
 
   PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
 """
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import sys
 import time
 import traceback
 
+from benchmarks import common
 from benchmarks import (
     committee_ablation,
     consensus_cost,
@@ -42,16 +47,26 @@ def main() -> None:
 
     names = [args.only] if args.only else list(ALL)
     failures = 0
+    sections = {}
     for name in names:
         print(f"\n=== {name} ===")
         t0 = time.time()
+        common.RESULTS.clear()
         try:
             ALL[name](full=args.full)
+            sections[name] = dict(common.RESULTS)
         except Exception:  # noqa: BLE001
+            # no sections entry: a partial run must not overwrite the last
+            # complete machine-readable snapshot
             failures += 1
             traceback.print_exc()
             print(f"{name},0.0,FAILED")
         print(f"# {name} took {time.time()-t0:.1f}s")
+
+    if "kernel_bench" in sections:
+        out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_kernels.json"
+        out.write_text(json.dumps(sections["kernel_bench"], indent=2) + "\n")
+        print(f"# wrote {out}")
     if failures:
         sys.exit(1)
 

@@ -10,7 +10,9 @@
 All operate on *flattened* update vectors (K, D); ``aggregate_pytrees``
 adapts pytree updates.  The inner reductions dispatch to the Pallas kernels
 (repro.kernels) when ``use_kernels=True`` — kernels are validated against
-the jnp implementations here (their ref oracles import these).
+the jnp implementations here (their ref oracles import these).  For updates
+already in the chain's quantized representation, ``aggregate_quantized_blobs``
+feeds the fused int8 kernel directly — no f32 stack is ever materialized.
 """
 from __future__ import annotations
 
@@ -21,23 +23,45 @@ import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 
 
+@jax.jit
+def _flatten_stacked_leaves(leaves):
+    """list of (K, ...) leaves -> (K, D) f32 in ravel_pytree leaf order."""
+    return jnp.concatenate(
+        [jnp.reshape(l, (l.shape[0], -1)).astype(jnp.float32) for l in leaves],
+        axis=1,
+    )
+
+
 def flatten_updates(updates: Sequence) -> tuple:
-    """Pytree updates -> (stacked (K, D) f32 matrix, unravel fn)."""
-    flats = []
-    unravel = None
-    for u in updates:
-        f, un = ravel_pytree(u)
-        flats.append(f.astype(jnp.float32))
-        unravel = un
-    return jnp.stack(flats), unravel
+    """Pytree updates -> (stacked (K, D) f32 matrix, unravel fn).
+
+    One jitted flatten of the leaf-stacked pytree instead of K separate
+    ``ravel_pytree`` traversals: XLA fuses the per-leaf reshape+concat into
+    a single program, and the host-side pytree walk happens once."""
+    if not updates:
+        raise ValueError("no updates to flatten")
+    _, unravel = ravel_pytree(updates[0])
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *updates)
+    stack = _flatten_stacked_leaves(jax.tree.leaves(stacked))
+    return stack, unravel
+
+
+def normalize_weights(K: int, weights: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """(K,) unnormalized (or None -> uniform) -> (K,) f32 summing to 1.
+
+    The single definition both aggregation paths share — the f32 einsum here
+    and the fused int8 kernel path (repro.kernels.ops) must weigh committee
+    scores identically."""
+    w = (jnp.ones((K,), jnp.float32) if weights is None
+         else jnp.asarray(weights).astype(jnp.float32))
+    return w / jnp.maximum(w.sum(), 1e-12)
 
 
 def fedavg(stack: jnp.ndarray, weights: Optional[jnp.ndarray] = None,
            use_kernels: bool = False) -> jnp.ndarray:
     """stack: (K, D); weights: (K,) unnormalized."""
     K = stack.shape[0]
-    w = jnp.ones((K,), jnp.float32) if weights is None else weights.astype(jnp.float32)
-    w = w / jnp.maximum(w.sum(), 1e-12)
+    w = normalize_weights(K, weights)
     if use_kernels:
         from repro.kernels.ops import fedavg_agg
         return fedavg_agg(stack, w)
@@ -52,11 +76,15 @@ def cwmed(stack: jnp.ndarray, use_kernels: bool = False) -> jnp.ndarray:
     return jnp.median(stack, axis=0)
 
 
-def trimmed_mean(stack: jnp.ndarray, trim: int) -> jnp.ndarray:
+def trimmed_mean(stack: jnp.ndarray, trim: int,
+                 use_kernels: bool = False) -> jnp.ndarray:
     """Drop the `trim` largest and smallest per coordinate, mean the rest."""
     K = stack.shape[0]
-    if 2 * trim >= K:
-        raise ValueError("trim too large")
+    if not 0 <= 2 * trim < K:
+        raise ValueError(f"trim={trim} invalid for K={K}")
+    if use_kernels:
+        from repro.kernels.ops import trimmed_mean as trimmed_mean_kernel
+        return trimmed_mean_kernel(stack, trim=trim)
     s = jnp.sort(stack, axis=0)
     return s[trim : K - trim].mean(axis=0)
 
@@ -75,10 +103,29 @@ def aggregate_pytrees(
     elif method == "cwmed":
         agg = cwmed(stack, use_kernels=use_kernels)
     elif method == "trimmed_mean":
-        agg = trimmed_mean(stack, trim)
+        agg = trimmed_mean(stack, trim, use_kernels=use_kernels)
     else:
         raise ValueError(method)
     return unravel(agg)
+
+
+def aggregate_quantized_blobs(
+    blobs: Sequence[dict],
+    unravel,
+    method: str = "fedavg",
+    weights: Optional[Sequence[float]] = None,
+    trim: int = 1,
+):
+    """Aggregate straight from K chain-format int8 blobs ({"q","scales","d"})
+    via the fused Pallas pass — one int8 read, no f32 stack."""
+    from repro.kernels.ops import aggregate_quantized
+
+    q = jnp.stack([b["q"] for b in blobs])
+    scales = jnp.stack([b["scales"] for b in blobs])
+    d = int(blobs[0]["d"])
+    w = None if weights is None else jnp.asarray(weights)
+    flat = aggregate_quantized(q, scales, d, method=method, weights=w, trim=trim)
+    return unravel(flat)
 
 
 def apply_update(params, update, scale: float = 1.0):

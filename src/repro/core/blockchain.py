@@ -57,6 +57,9 @@ class Block:
     # block hash (filled on append)
     hash: str = ""
     pruned: bool = False
+    # payload stored in the chain's codec format (e.g. int8 blob); decode
+    # via Chain._payload, read raw via Chain.raw_payload
+    encoded: bool = False
 
     def compute_hash(self) -> str:
         h = hashlib.sha256()
@@ -64,6 +67,10 @@ class Block:
         h.update(f"{self.index}|{self.kind}|{self.round}".encode())
         h.update(self.payload_digest.encode())
         h.update(f"{self.uploader}|{self.score}".encode())
+        # the codec flag is part of the payload's interpretation: an
+        # unauthenticated flip would make a verified chain decode (or not
+        # decode) the stored blob differently
+        h.update(f"{self.encoded}".encode())
         return h.hexdigest()
 
 
@@ -74,7 +81,8 @@ class LayoutError(RuntimeError):
 class Chain:
     """The alliance-chain ledger for one BFLC training community."""
 
-    def __init__(self, k_updates_per_round: int, off_chain_store=None):
+    def __init__(self, k_updates_per_round: int, off_chain_store=None,
+                 update_codec=None):
         if k_updates_per_round < 1:
             raise ValueError("k must be >= 1")
         self.k = k_updates_per_round
@@ -82,6 +90,11 @@ class Chain:
         self._latest_model_idx: int = -1   # O(1) latest-model pointer
         self._latest_model_round: int = -1
         self.store = off_chain_store
+        # optional payload codec for UPDATE blocks (paper §IV.D storage
+        # optimization): encode() shrinks the on-chain blob (e.g. int8
+        # quantization), decode() recovers the pytree.  Hashes cover the
+        # *encoded* payload — that is what the chain stores and replicates.
+        self.codec = update_codec
 
     # ------------------------------------------------------------------
     # layout arithmetic (paper §III.A)
@@ -138,8 +151,13 @@ class Chain:
         return blk
 
     def append_update(
-        self, update: Any, uploader: int, score: float
+        self, update: Any, uploader: int, score: float, *,
+        encoded: bool = False,
     ) -> Block:
+        """Append one scored local update.  With a codec configured the
+        payload is stored in codec format; pass ``encoded=True`` when the
+        caller already encoded it (e.g. a whole round quantized in one
+        kernel launch)."""
         if self._latest_model_idx < 0:
             raise LayoutError("no genesis model block yet")
         t = self._latest_model_round
@@ -148,6 +166,14 @@ class Chain:
             raise LayoutError(
                 f"round {t} already holds {self.k} updates; aggregate first"
             )
+        if encoded and self.codec is None:
+            raise ValueError(
+                "encoded=True requires a Chain update_codec (nothing could "
+                "decode the blob on read)"
+            )
+        if self.codec is not None and not encoded:
+            update = self.codec.encode(update)
+            encoded = True
         digest = pytree_digest(update)
         payload = update
         if self.store is not None:
@@ -163,6 +189,7 @@ class Chain:
                 payload=payload,
                 uploader=uploader,
                 score=float(score),
+                encoded=encoded,
             )
         )
 
@@ -175,12 +202,20 @@ class Chain:
     # ------------------------------------------------------------------
     # reads
     # ------------------------------------------------------------------
-    def _payload(self, blk: Block) -> Any:
+    def raw_payload(self, blk: Block) -> Any:
+        """Stored (possibly codec-encoded) payload — the fused aggregation
+        path reads update blobs through here without dequantizing."""
         if blk.payload is not None:
             return blk.payload
         if self.store is not None:
             return self.store.get(blk.payload_digest)
         raise KeyError(f"block {blk.index} pruned and no off-chain store")
+
+    def _payload(self, blk: Block) -> Any:
+        raw = self.raw_payload(blk)
+        if blk.encoded and self.codec is not None:
+            return self.codec.decode(raw)
+        return raw
 
     def latest_model(self) -> Tuple[int, Any]:
         """O(1): returns (round, model)."""
@@ -196,6 +231,14 @@ class Chain:
     def updates_at_round(self, t: int) -> List[Block]:
         lo, hi = self.update_index_range(t)
         return self.blocks[lo : min(hi, self.height - 1) + 1]
+
+    def update_payloads_at_round(self, t: int, decode: bool = True) -> List[Any]:
+        """Round-t update payloads; ``decode=False`` returns the stored
+        codec-format blobs (the fused aggregation's input)."""
+        return [
+            self._payload(b) if decode else self.raw_payload(b)
+            for b in self.updates_at_round(t)
+        ]
 
     # ------------------------------------------------------------------
     # integrity + storage optimization

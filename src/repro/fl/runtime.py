@@ -25,7 +25,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import election as election_mod
-from repro.core.aggregation import aggregate_pytrees, apply_update
+from repro.core.aggregation import (
+    aggregate_pytrees,
+    apply_update,
+    flatten_updates,
+)
 from repro.core.attacks import ATTACKS, CollusionPolicy
 from repro.core.blockchain import Chain
 from repro.core.consensus import CommitteeConsensus
@@ -54,8 +58,13 @@ class BFLCConfig:
     election_method: str = election_mod.BY_SCORE
     accept_threshold: float = 0.5        # relative threshold (consensus stat)
     aggregation: str = "fedavg"
+    trim: int = 1                        # trimmed_mean drop count per side
     weight_by_score: bool = True
     use_kernels: bool = False
+    # store update blocks as int8 blobs (paper §IV.D) and aggregate straight
+    # from the quantized chain representation via the fused Pallas pass —
+    # one int8 read of the stack, no f32 (K, D) materialization.
+    quantize_chain: bool = False
     malicious_fraction: float = 0.0
     attack: str = "gaussian"
     attack_sigma: float = 1.0
@@ -99,6 +108,24 @@ class BFLCRuntime:
         cfg: BFLCConfig,
         initial_params=None,
     ):
+        if cfg.quantize_chain and not cfg.use_kernels:
+            # the quantized chain path IS the fused Pallas engine; there is
+            # no jnp fallback for it, so refuse the contradictory config
+            # rather than silently overriding the use_kernels switch
+            raise ValueError(
+                "quantize_chain=True requires use_kernels=True "
+                "(aggregation runs the fused Pallas int8 path)"
+            )
+        if cfg.aggregation == "trimmed_mean" and not (
+            0 <= 2 * cfg.trim < cfg.k_updates
+        ):
+            # validate up front: by round time the update blocks are already
+            # on the chain, and a failed aggregation would strand the round
+            # mid-layout
+            raise ValueError(
+                f"trim={cfg.trim} invalid for k_updates={cfg.k_updates} "
+                f"(need 0 <= 2*trim < k_updates)"
+            )
         self.adapter = adapter
         self.data = dataset
         self.cfg = cfg
@@ -120,9 +147,14 @@ class BFLCRuntime:
 
         # chain + genesis model block (#0: randomly initialized model, or a
         # warm start — new communities may bootstrap from an existing model)
-        self.chain = Chain(cfg.k_updates)
         params = (initial_params if initial_params is not None
                   else adapter.init(jax.random.PRNGKey(cfg.seed)))
+        self._codec = None
+        if cfg.quantize_chain:
+            from repro.kernels.ops import Int8UpdateCodec
+
+            self._codec = Int8UpdateCodec(params)
+        self.chain = Chain(cfg.k_updates, update_codec=self._codec)
         self.chain.append_model(params, 0)
 
         # jitted batched helpers
@@ -290,16 +322,38 @@ class BFLCRuntime:
         packed_scores = [r.median_score for r in records]
         packed_updates = [all_updates[u] for u in packed_ids]
         trainers = trainers_total
-        for i, (u, sc) in enumerate(zip(packed_ids, packed_scores)):
-            self.chain.append_update(packed_updates[i], u, sc)
-            self.manager.nodes[u].score_history.append(sc)
-
-        # (4) aggregation trigger -> next model block
         weights = packed_scores if cfg.weight_by_score else None
-        agg = aggregate_pytrees(
-            packed_updates, method=cfg.aggregation, weights=weights,
-            use_kernels=cfg.use_kernels,
-        )
+
+        if cfg.quantize_chain:
+            # quantized chain path: flatten the packed cohort once, quantize
+            # the whole (K, D) stack in one kernel launch, store the int8
+            # blobs as update blocks, and aggregate (4) STRAIGHT from the
+            # quantized representation via the fused one-pass kernel — the
+            # f32 stack never hits HBM.
+            from repro.kernels.ops import aggregate_quantized, quantize_stack
+
+            stack, unravel = flatten_updates(packed_updates)
+            q, s, d = quantize_stack(stack)
+            for i, (u, sc) in enumerate(zip(packed_ids, packed_scores)):
+                self.chain.append_update(
+                    {"q": q[i], "scales": s[i], "d": d}, u, sc, encoded=True
+                )
+                self.manager.nodes[u].score_history.append(sc)
+            agg = unravel(aggregate_quantized(
+                q, s, d, method=cfg.aggregation,
+                weights=None if weights is None else jnp.asarray(weights),
+                trim=cfg.trim,
+            ))
+        else:
+            for i, (u, sc) in enumerate(zip(packed_ids, packed_scores)):
+                self.chain.append_update(packed_updates[i], u, sc)
+                self.manager.nodes[u].score_history.append(sc)
+
+            # (4) aggregation trigger -> next model block
+            agg = aggregate_pytrees(
+                packed_updates, method=cfg.aggregation, weights=weights,
+                trim=cfg.trim, use_kernels=cfg.use_kernels,
+            )
         new_params = apply_update(params, agg)
         self.chain.append_model(new_params, t + 1)
 

@@ -1,3 +1,41 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the BFLC round hot path.
+
+Layout: one module per kernel (fedavg_agg, cwmed + trimmed_mean, quantize,
+fused_agg) + ``ops`` (the padded, jit'd, method-dispatch public layer) +
+``ref`` (pure-jnp oracles the tests allclose against).  Import the public
+API from here; reach into submodules only for the raw ``pallas_call``
+wrappers.
+"""
+from repro.kernels.fused_agg import METHODS
+from repro.kernels.tiling import BLOCK_D
+from repro.kernels.ops import (
+    Int8UpdateCodec,
+    aggregate,
+    aggregate_quantized,
+    cwmed,
+    dequantize,
+    dequantize_pytree,
+    fedavg_agg,
+    padded_dim,
+    quantize,
+    quantize_pytree,
+    quantize_stack,
+    trimmed_mean,
+)
+
+__all__ = [
+    "BLOCK_D",
+    "METHODS",
+    "Int8UpdateCodec",
+    "aggregate",
+    "aggregate_quantized",
+    "cwmed",
+    "dequantize",
+    "dequantize_pytree",
+    "fedavg_agg",
+    "padded_dim",
+    "quantize",
+    "quantize_pytree",
+    "quantize_stack",
+    "trimmed_mean",
+]

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-BLOCK_D = 2048
+from repro.kernels.tiling import BLOCK_D
 
 
 def _fedavg_kernel(w_ref, x_ref, o_ref):

@@ -1,21 +1,41 @@
-"""jit'd public wrappers around the Pallas kernels: pad to tile boundaries,
-pick interpret mode off-TPU, and expose pytree-level helpers.
+"""jit'd public wrappers around the Pallas kernels.
+
+This is the method-dispatch layer of the aggregation engine: callers hand
+over a f32 ``(K, D)`` stack *or* the chain's quantized representation
+(int8 stack + per-tile scales) and name a reduction; padding to the tile
+boundary happens exactly once here, the interpret flag is picked off-TPU,
+and pytree-level helpers adapt model updates.
+
+  aggregate(stack, method=..., weights=..., trim=...)        f32 path
+  aggregate_quantized(q, scales, method=..., ...)            fused int8 path
+  quantize_stack(stack)                                      round codec
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.cwmed import cwmed_kernel
-from repro.kernels.fedavg_agg import BLOCK_D, fedavg_agg_kernel
-from repro.kernels.quantize import dequantize_kernel, quantize_kernel
+from repro.kernels.cwmed import cwmed_kernel, trimmed_mean_kernel
+from repro.kernels.fedavg_agg import fedavg_agg_kernel
+from repro.kernels.tiling import BLOCK_D
+from repro.kernels.fused_agg import METHODS, fused_agg_kernel
+from repro.kernels.quantize import (
+    dequantize_kernel,
+    quantize_kernel,
+    quantize_stack_kernel,
+)
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def padded_dim(d: int) -> int:
+    """Smallest multiple of BLOCK_D >= d."""
+    return d + (-d) % BLOCK_D
 
 
 def _pad_to_block(x: jnp.ndarray, axis: int = -1) -> Tuple[jnp.ndarray, int]:
@@ -28,27 +48,66 @@ def _pad_to_block(x: jnp.ndarray, axis: int = -1) -> Tuple[jnp.ndarray, int]:
     return jnp.pad(x, widths), pad
 
 
+def _normalize_weights(K: int, weights: Optional[jnp.ndarray]) -> jnp.ndarray:
+    from repro.core.aggregation import normalize_weights
+
+    return normalize_weights(K, weights)
+
+
+# ----------------------------------------------------------------------
+# method dispatch: f32 stacks
+# ----------------------------------------------------------------------
+def aggregate(
+    stack: jnp.ndarray,
+    method: str = "fedavg",
+    weights: Optional[jnp.ndarray] = None,
+    trim: int = 1,
+) -> jnp.ndarray:
+    """(K, D) f32 -> (D,) via the Pallas kernels; pads once, dispatches.
+
+    fedavg weights may be unnormalized (e.g. raw committee scores) — they
+    are normalized to sum 1 here; use ``fedavg_agg`` for a raw weighted
+    sum."""
+    if method not in METHODS:
+        raise ValueError(f"unknown method {method!r} (want one of {METHODS})")
+    K, D = stack.shape
+    if method == "fedavg":
+        return fedavg_agg(stack, _normalize_weights(K, weights))
+    # zero-pad to the tile boundary: reductions are per-lane, so padded
+    # lanes only affect padded outputs, which are sliced off below
+    padded, _ = _pad_to_block(stack)
+    if method == "cwmed":
+        out = cwmed_kernel(padded, interpret=_interpret())
+    else:
+        out = trimmed_mean_kernel(padded, trim=trim, interpret=_interpret())
+    return out[:D]
+
+
 def fedavg_agg(stack: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
-    """(K, D) x (K,) -> (D,) weighted sum via the Pallas kernel."""
+    """(K, D) x (K,) -> (D,) weighted SUM via the Pallas kernel — weights
+    are used as-is (callers own normalization)."""
     D = stack.shape[1]
     padded, _ = _pad_to_block(stack)
-    out = fedavg_agg_kernel(padded, weights, interpret=_interpret())
+    out = fedavg_agg_kernel(
+        padded, jnp.asarray(weights).astype(jnp.float32),
+        interpret=_interpret(),
+    )
     return out[:D]
 
 
 def cwmed(stack: jnp.ndarray) -> jnp.ndarray:
     """(K, D) -> (D,) coordinate-wise median via the Pallas kernel."""
-    D = stack.shape[1]
-    # pad with +inf/-inf in equal halves would bias the median; instead pad
-    # with the first row's values so padded lanes stay valid and are sliced off
-    pad = (-D) % BLOCK_D
-    if pad:
-        fill = jnp.broadcast_to(stack[:, :1], (stack.shape[0], pad))
-        stack = jnp.concatenate([stack, fill], axis=1)
-    out = cwmed_kernel(stack, interpret=_interpret())
-    return out[:D]
+    return aggregate(stack, "cwmed")
 
 
+def trimmed_mean(stack: jnp.ndarray, trim: int = 1) -> jnp.ndarray:
+    """(K, D) -> (D,) coordinate-wise trimmed mean via the Pallas kernel."""
+    return aggregate(stack, "trimmed_mean", trim=trim)
+
+
+# ----------------------------------------------------------------------
+# quantized representation: codec + fused one-pass aggregation
+# ----------------------------------------------------------------------
 def quantize(x: jnp.ndarray):
     """(D,) -> (q int8 (D,), scales, D) — chain-storage codec."""
     D = x.shape[0]
@@ -62,6 +121,49 @@ def dequantize(q: jnp.ndarray, scales: jnp.ndarray, D: int) -> jnp.ndarray:
     return out[:D]
 
 
+def quantize_stack(stack: jnp.ndarray):
+    """(K, D) f32 -> (q (K, Dpad) int8, scales (K, nblk) f32, D).
+
+    One kernel launch quantizes a whole round's K update vectors; zero-pads
+    to the tile boundary (padded lanes quantize to 0 and are never read back
+    past D)."""
+    D = stack.shape[1]
+    padded, _ = _pad_to_block(stack)
+    q, s = quantize_stack_kernel(padded, interpret=_interpret())
+    return q, s, D
+
+
+def aggregate_quantized(
+    q: jnp.ndarray,
+    scales: jnp.ndarray,
+    D: Optional[int] = None,
+    method: str = "fedavg",
+    weights: Optional[jnp.ndarray] = None,
+    trim: int = 1,
+    quantize_out: bool = False,
+):
+    """Fused one-pass aggregation straight from the chain's int8 blocks.
+
+    q: (K, Dpad) int8, scales: (K, Dpad // BLOCK_D) f32, D: true (unpadded)
+    dimension.  Returns (D,) f32 — or, with ``quantize_out``, the quantized
+    result ``(q_out (Dpad,) int8, out_scales, D)`` ready for chain storage —
+    without ever materializing the f32 (K, D) stack in HBM."""
+    K, Dpad = q.shape
+    true_d = Dpad if D is None else D
+    w = _normalize_weights(K, weights)
+    out = fused_agg_kernel(
+        q, scales, w, method=method, trim=trim,
+        quantize_out=quantize_out, interpret=_interpret(),
+    )
+    if quantize_out:
+        q_out, s_out = out
+        return q_out, s_out, true_d
+    return out[:true_d]
+
+
+# ----------------------------------------------------------------------
+# pytree adapters
+# ----------------------------------------------------------------------
 def quantize_pytree(tree):
     """Flatten + quantize a model/update pytree for on-chain storage."""
     from jax.flatten_util import ravel_pytree
@@ -73,3 +175,27 @@ def quantize_pytree(tree):
 
 def dequantize_pytree(blob, unravel):
     return unravel(dequantize(blob["q"], blob["scales"], blob["d"]))
+
+
+class Int8UpdateCodec:
+    """Chain payload codec: update pytree <-> int8 blob dict.
+
+    The unravel structure is fixed at construction from an example pytree
+    (all BFLC updates share the model's structure), so decode needs no
+    side-channel."""
+
+    def __init__(self, example_pytree):
+        from jax.flatten_util import ravel_pytree
+
+        flat, self._unravel = ravel_pytree(example_pytree)
+        self.dim = flat.shape[0]
+
+    def encode(self, tree):
+        blob, _ = quantize_pytree(tree)
+        return blob
+
+    def decode(self, blob):
+        return dequantize_pytree(blob, self._unravel)
+
+    def unravel(self, flat: jnp.ndarray):
+        return self._unravel(flat)

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-BLOCK_D = 2048
+from repro.kernels.tiling import BLOCK_D
 
 
 def _quant_kernel(x_ref, q_ref, s_ref):
@@ -51,6 +51,41 @@ def quantize_kernel(x: jnp.ndarray, *, interpret: bool = True):
         interpret=interpret,
     )(x.reshape(1, D))
     return q[0], s[0]
+
+
+def _quant_stack_kernel(x_ref, q_ref, s_ref):
+    # x_ref: (K, BLOCK_D) tile; per-row per-tile symmetric scales
+    x = x_ref[...].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)          # (K, 1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q_ref[...] = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    s_ref[...] = scale
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_stack_kernel(stack: jnp.ndarray, *, interpret: bool = True):
+    """stack: (K, D) f32 -> (q (K, D) int8, scales (K, D // BLOCK_D) f32).
+
+    One grid pass quantizes all K rows tile-by-tile — the codec for packing
+    a whole round's update blocks onto the chain in one kernel launch."""
+    K, D = stack.shape
+    assert D % BLOCK_D == 0, D
+    nblk = D // BLOCK_D
+    q, s = pl.pallas_call(
+        _quant_stack_kernel,
+        grid=(nblk,),
+        in_specs=[pl.BlockSpec((K, BLOCK_D), lambda i: (0, i))],
+        out_specs=[
+            pl.BlockSpec((K, BLOCK_D), lambda i: (0, i)),
+            pl.BlockSpec((K, 1), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((K, D), jnp.int8),
+            jax.ShapeDtypeStruct((K, nblk), jnp.float32),
+        ],
+        interpret=interpret,
+    )(stack)
+    return q, s
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-BLOCK_D = 2048  # must match the kernels' tiling
+from repro.kernels.tiling import BLOCK_D  # the kernels' tiling
 
 
 def fedavg_agg_ref(stack: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
@@ -14,6 +14,14 @@ def fedavg_agg_ref(stack: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
 
 def cwmed_ref(stack: jnp.ndarray) -> jnp.ndarray:
     return jnp.median(stack.astype(jnp.float32), axis=0)
+
+
+def trimmed_mean_ref(stack: jnp.ndarray, trim: int) -> jnp.ndarray:
+    K = stack.shape[0]
+    if not 0 <= 2 * trim < K:
+        raise ValueError(f"trim={trim} too large for K={K}")
+    s = jnp.sort(stack.astype(jnp.float32), axis=0)
+    return s[trim : K - trim].mean(axis=0)
 
 
 def quantize_ref(x: jnp.ndarray):
@@ -28,3 +36,42 @@ def quantize_ref(x: jnp.ndarray):
 def dequantize_ref(q: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
     D = q.shape[0]
     return (q.reshape(-1, BLOCK_D).astype(jnp.float32) * scales[:, None]).reshape(D)
+
+
+def quantize_stack_ref(stack: jnp.ndarray):
+    """(K, D) f32 -> (q (K, D) int8, scales (K, D // BLOCK_D) f32)."""
+    K, D = stack.shape
+    xb = stack.astype(jnp.float32).reshape(K, -1, BLOCK_D)
+    amax = jnp.max(jnp.abs(xb), axis=2)
+    scales = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(
+        jnp.round(xb / scales[:, :, None]), -127, 127
+    ).astype(jnp.int8)
+    return q.reshape(K, D), scales
+
+
+def dequantize_stack_ref(q: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
+    """(K, D) int8 + (K, D // BLOCK_D) scales -> (K, D) f32."""
+    K, D = q.shape
+    return (
+        q.reshape(K, -1, BLOCK_D).astype(jnp.float32) * scales[:, :, None]
+    ).reshape(K, D)
+
+
+def fused_agg_ref(
+    q: jnp.ndarray,
+    scales: jnp.ndarray,
+    weights: jnp.ndarray,
+    method: str = "fedavg",
+    trim: int = 1,
+) -> jnp.ndarray:
+    """Staged oracle for the fused kernel: dequantize the whole stack to f32,
+    then run the f32 reduction."""
+    stack = dequantize_stack_ref(q, scales)
+    if method == "fedavg":
+        return fedavg_agg_ref(stack, weights)
+    if method == "cwmed":
+        return cwmed_ref(stack)
+    if method == "trimmed_mean":
+        return trimmed_mean_ref(stack, trim)
+    raise ValueError(method)

@@ -1,0 +1,11 @@
+"""Single source of the kernels' lane tiling.
+
+Every kernel (and the jnp oracles) tiles the flattened update dimension in
+BLOCK_D-lane chunks, and the quantization codec stores one scale per
+BLOCK_D tile — so the constant must agree across modules or fused kernels
+would apply scales computed over a different window.  Tune it here only.
+
+2048 = 16 x 128: lane-aligned for the VPU, and a whole (K<=64, BLOCK_D)
+f32 tile fits comfortably in VMEM.
+"""
+BLOCK_D = 2048

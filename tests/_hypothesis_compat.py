@@ -1,0 +1,38 @@
+"""Degrade gracefully when ``hypothesis`` is not installed.
+
+Test modules import ``given``/``settings``/``st`` from here instead of from
+hypothesis directly.  With hypothesis present this is a pass-through; without
+it the property tests are skipped individually while the rest of the module
+still collects and runs (a bare ``import hypothesis`` at module scope used to
+error out collection for seven modules).
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for ``hypothesis.strategies``: any attribute access,
+        call, or builder chain (``st.integers(1, 8).map(...)``) yields the
+        same inert object — strategies are only built at decoration time,
+        never drawn from, because the test body is skipped."""
+
+        def __getattr__(self, name):
+            return self
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+    st = _AnyStrategy()
+
+    def given(*args, **kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn

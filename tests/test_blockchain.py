@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.blockchain import Chain, LayoutError, pytree_digest
 from repro.core.storage import OffChainStore
@@ -143,3 +143,34 @@ def test_digest_sensitivity():
     assert pytree_digest(a) == pytree_digest(b)
     b["w"] = b["w"].at[0, 0].set(1.0001)
     assert pytree_digest(a) != pytree_digest(b)
+
+
+def test_encoded_update_requires_codec():
+    chain = Chain(2)
+    chain.append_model(model(), 0)
+    with pytest.raises(ValueError, match="codec"):
+        chain.append_update({"q": jnp.zeros(4, jnp.int8)}, 0, 0.5, encoded=True)
+
+
+def test_codec_chain_roundtrip_and_tamper():
+    class _DoubleCodec:  # toy codec: enough to exercise encode/decode wiring
+        def encode(self, tree):
+            return {k: v * 2 for k, v in tree.items()}
+
+        def decode(self, blob):
+            return {k: v / 2 for k, v in blob.items()}
+
+    chain = Chain(1, update_codec=_DoubleCodec())
+    chain.append_model(model(), 0)
+    chain.append_update(update(3.0), uploader=0, score=0.9)
+    blk = chain.blocks[1]
+    assert blk.encoded
+    np.testing.assert_allclose(
+        chain.raw_payload(blk)["b"], update(3.0)["b"] * 2
+    )
+    np.testing.assert_allclose(
+        chain.update_payloads_at_round(0)[0]["b"], update(3.0)["b"]
+    )
+    assert chain.verify()
+    blk.encoded = False          # the flag is hashed: tampering must show
+    assert not chain.verify()

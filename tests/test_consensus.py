@@ -1,7 +1,7 @@
 """Committee Consensus Mechanism (paper §III.B) + cost model (§V.A)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.consensus import CommitteeConsensus, consensus_cost
 from repro.core.election import BY_SCORE, MULTI_FACTOR, RANDOM, elect

@@ -92,6 +92,44 @@ def test_pruning_during_training(small_ds, adapter):
     assert rt.chain.latest_model()[1] is not None
 
 
+def test_bflc_quantized_chain_runs_and_matches_f32(small_ds, adapter):
+    import jax.numpy as jnp
+
+    kw = dict(active_proportion=0.5, committee_fraction=0.3,
+              k_updates=4, local_steps=4, local_batch=8, seed=0)
+    rt_f32 = BFLCRuntime(adapter, small_ds, BFLCConfig(**kw))
+    logs_f32 = rt_f32.run(3, eval_every=3)
+
+    cfg = BFLCConfig(quantize_chain=True, use_kernels=True, **kw)
+    rt = BFLCRuntime(adapter, small_ds, cfg)
+    logs = rt.run(3, eval_every=3)
+
+    assert rt.chain.verify()
+    assert rt.chain.height == 1 + 3 * (cfg.k_updates + 1)
+    # update blocks hold int8 blobs, ~4x smaller than the f32 chain
+    blk = rt.chain.blocks[1]
+    assert blk.encoded and blk.payload["q"].dtype == jnp.int8
+    assert rt.chain.storage_bytes() < 0.5 * rt_f32.chain.storage_bytes()
+    # decode path recovers the update pytree structure
+    decoded = rt.chain.update_payloads_at_round(0)[0]
+    assert set(decoded) == set(rt.global_params())
+    # int8 chain training tracks the f32 path within noise
+    assert logs[-1].test_accuracy is not None
+    assert abs(logs[-1].test_accuracy - logs_f32[-1].test_accuracy) < 0.25
+
+
+@pytest.mark.parametrize("method", ["cwmed", "trimmed_mean"])
+def test_bflc_quantized_chain_robust_methods(small_ds, adapter, method):
+    cfg = BFLCConfig(active_proportion=0.5, committee_fraction=0.3,
+                     k_updates=4, local_steps=2, local_batch=8, seed=1,
+                     aggregation=method, quantize_chain=True,
+                     use_kernels=True)
+    rt = BFLCRuntime(adapter, small_ds, cfg)
+    logs = rt.run(2, eval_every=2)
+    assert rt.chain.verify()
+    assert 0.0 <= logs[-1].test_accuracy <= 1.0
+
+
 def test_basic_fl_and_cwmed(small_ds, adapter):
     for method in ("fedavg", "cwmed"):
         fl = FLTrainer(adapter, small_ds,

@@ -1,0 +1,163 @@
+"""Fused quantized aggregation engine: parity vs f32 jnp oracles.
+
+Tolerance note: the fused path reads int8 inputs, so outputs can differ
+from the f32 oracle only through quantization error — bounded by the
+per-tile scale (half an int8 step per element; 2*scale is a loose cover
+for the reductions and the optional output re-quantization step).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import kernels
+from repro.kernels import ops, ref
+
+KS = (3, 5, 8)
+DS = (2048, 4096)                 # block-aligned
+DS_RAGGED = (100, 2049, 5000)     # exercise the padding edges
+METHODS = ("fedavg", "cwmed", "trimmed_mean")
+
+
+def _stack_and_weights(K, D, seed=0):
+    stack = jax.random.normal(jax.random.PRNGKey(seed), (K, D), jnp.float32) * 3
+    w = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(seed + 1), (K,)))
+    return stack, w
+
+
+# ----------------------------------------------------------------------
+# new f32 trimmed-mean kernel
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("K", KS + (4, 17))
+@pytest.mark.parametrize("D", DS + DS_RAGGED)
+def test_trimmed_mean_matches_ref(K, D):
+    stack, _ = _stack_and_weights(K, D, seed=K + D)
+    trim = (K - 1) // 2
+    np.testing.assert_allclose(
+        ops.trimmed_mean(stack, trim=trim),
+        ref.trimmed_mean_ref(stack, trim),
+        atol=1e-5,
+    )
+
+
+def test_trimmed_mean_trim_zero_is_mean():
+    stack, _ = _stack_and_weights(4, 2048)
+    np.testing.assert_allclose(
+        ops.trimmed_mean(stack, trim=0), stack.mean(axis=0), atol=1e-5
+    )
+
+
+def test_trimmed_mean_rejects_bad_trim():
+    stack, _ = _stack_and_weights(4, 2048)
+    with pytest.raises(ValueError):
+        ops.trimmed_mean(stack, trim=2)
+
+
+def test_aggregate_dispatch_rejects_unknown_method():
+    stack, w = _stack_and_weights(4, 2048)
+    with pytest.raises(ValueError):
+        ops.aggregate(stack, "krum", weights=w)
+
+
+# ----------------------------------------------------------------------
+# stack quantizer (the round codec)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("D", (2048, 5000))
+def test_quantize_stack_matches_per_row_ref(D):
+    stack, _ = _stack_and_weights(6, D)
+    q, s, d = ops.quantize_stack(stack)
+    assert d == D and q.dtype == jnp.int8
+    assert q.shape[1] == kernels.padded_dim(D)
+    for i in range(stack.shape[0]):
+        qi, si, _ = ops.quantize(stack[i])
+        np.testing.assert_array_equal(q[i], qi)
+        np.testing.assert_allclose(s[i], si, rtol=1e-6)
+
+
+# ----------------------------------------------------------------------
+# fused int8 path vs f32 oracle (atol <= 2*scale)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize("K", KS)
+@pytest.mark.parametrize("D", DS + DS_RAGGED)
+def test_fused_matches_f32_oracle(method, K, D):
+    stack, w = _stack_and_weights(K, D, seed=K * 131 + D)
+    q, s, d = ops.quantize_stack(stack)
+    out = ops.aggregate_quantized(q, s, d, method=method, weights=w)
+    assert out.shape == (D,)
+    if method == "fedavg":
+        oracle = ref.fedavg_agg_ref(stack, w / w.sum())
+    elif method == "cwmed":
+        oracle = ref.cwmed_ref(stack)
+    else:
+        oracle = ref.trimmed_mean_ref(stack, 1)
+    tol = 2.0 * float(s.max())
+    np.testing.assert_allclose(out, oracle, atol=tol)
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_fused_matches_staged_dequant_exactly(method):
+    # vs the *staged* oracle (dequantize-then-reduce): identical inputs, so
+    # agreement is to float tolerance, not quantization tolerance
+    K, D = 5, 5000
+    stack, w = _stack_and_weights(K, D)
+    q, s, d = ops.quantize_stack(stack)
+    out = ops.aggregate_quantized(q, s, d, method=method, weights=w)
+    oracle = ref.fused_agg_ref(q, s, w / w.sum(), method=method, trim=1)[:d]
+    np.testing.assert_allclose(out, oracle, atol=1e-5)
+
+
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize("D", (2048, 5000))
+def test_fused_quantize_out_roundtrip_bound(method, D):
+    # quantize -> fused aggregate -> requantize -> dequantize stays within
+    # input-quantization + output-quantization error of the f32 oracle
+    K = 5
+    stack, w = _stack_and_weights(K, D, seed=D)
+    q, s, d = ops.quantize_stack(stack)
+    qo, so, do = ops.aggregate_quantized(
+        q, s, d, method=method, weights=w, quantize_out=True
+    )
+    assert qo.dtype == jnp.int8 and do == D
+    out = ops.dequantize(qo, so, do)
+    oracle = ref.fused_agg_ref(q, s, w / w.sum(), method=method, trim=1)[:d]
+    tol = 2.0 * float(jnp.maximum(s.max(), so.max()))
+    np.testing.assert_allclose(out, oracle, atol=tol)
+
+
+def test_fused_unweighted_defaults_to_uniform():
+    K, D = 4, 2048
+    stack, _ = _stack_and_weights(K, D)
+    q, s, d = ops.quantize_stack(stack)
+    out = ops.aggregate_quantized(q, s, d, method="fedavg")
+    uniform = jnp.full((K,), 1.0 / K)
+    np.testing.assert_allclose(
+        out, ref.fused_agg_ref(q, s, uniform, method="fedavg"), atol=1e-5
+    )
+
+
+# ----------------------------------------------------------------------
+# pytree-level quantized aggregation (the runtime's chain path)
+# ----------------------------------------------------------------------
+def test_aggregate_quantized_blobs_matches_f32_pytrees():
+    from repro.core.aggregation import (
+        aggregate_pytrees,
+        aggregate_quantized_blobs,
+        flatten_updates,
+    )
+
+    key = jax.random.PRNGKey(0)
+    ups = [
+        {"w": jax.random.normal(jax.random.fold_in(key, i), (30, 40)),
+         "b": jax.random.normal(jax.random.fold_in(key, 50 + i), (7,))}
+        for i in range(5)
+    ]
+    stack, unravel = flatten_updates(ups)
+    q, s, d = ops.quantize_stack(stack)
+    blobs = [{"q": q[i], "scales": s[i], "d": d} for i in range(5)]
+    weights = [0.5, 1.0, 2.0, 1.0, 0.5]
+    got = aggregate_quantized_blobs(blobs, unravel, "fedavg", weights)
+    want = aggregate_pytrees(ups, "fedavg", weights)
+    tol = 2.0 * float(s.max())
+    for k in ("w", "b"):
+        np.testing.assert_allclose(got[k], want[k], atol=tol)

@@ -1,7 +1,7 @@
 """Hypergeometric attack analysis (paper §IV.C, Fig. 3)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.security import attack_success_probability, fig3_grid
 

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.checkpoint import load_pytree, save_pytree
 from repro.data import dirichlet_partition, leaf_style_partition, make_femnist_like
