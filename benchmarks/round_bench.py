@@ -1,0 +1,52 @@
+"""Round-loop stage timings: where a BFLC round spends its wall clock.
+
+Runs a small community through the stage pipeline for both aggregation
+engines (f32 ``pytree`` and fused ``int8``) and reports the mean
+per-stage time from ``RoundContext.timings`` (round 0 is dropped — it
+pays XLA compilation).  ``benchmarks.run`` snapshots these rows to
+``BENCH_round.json`` so round-loop perf is tracked across PRs alongside
+``BENCH_kernels.json``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.api import build_runtime
+from repro.data import make_femnist_like
+from repro.fl import femnist_adapter
+from repro.fl.pipeline import STAGE_TIMING_KEYS
+
+
+def run(full: bool = False):
+    clients = 80 if full else 40
+    rounds = 8 if full else 4
+    ds = make_femnist_like(num_clients=clients, mean_samples=60,
+                           test_size=400, seed=2)
+    adapter = femnist_adapter(width=16 if full else 8)
+
+    base = dict(active_proportion=0.4, committee_fraction=0.3,
+                k_updates=6, local_steps=10, local_batch=32, seed=0)
+    variants = {
+        "f32": dict(base),
+        "int8": dict(base, quantize_chain=True, use_kernels=True),
+    }
+
+    print("# round-loop per-stage timings (us, mean over post-compile rounds)")
+    print("variant_stage,us")
+    for variant, cfg in variants.items():
+        rt = build_runtime(adapter, ds, cfg)
+        rt.run(rounds, eval_every=rounds + 1)
+        assert rt.chain.verify()
+        steady = rt.stage_timings[1:]     # round 0 pays compilation
+        total = 0.0
+        for key in STAGE_TIMING_KEYS:
+            us = float(np.mean([t[key] for t in steady])) * 1e6
+            total += us
+            emit(f"round_{variant}_{key}", us)
+        emit(f"round_{variant}_total", total,
+             f"rounds={len(steady)};stages={len(STAGE_TIMING_KEYS)}")
+
+
+if __name__ == "__main__":
+    run(full=True)

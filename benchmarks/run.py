@@ -1,7 +1,8 @@
 """Benchmark harness entry: one function per paper table/figure + systems
 benchmarks.  Prints ``name,us_per_call,derived`` CSV lines and writes the
-kernel rows to ``BENCH_kernels.json`` (name -> {us, bytes}) so the perf
-trajectory is machine-trackable across PRs.
+kernel rows to ``BENCH_kernels.json`` and the round-loop stage timings to
+``BENCH_round.json`` (name -> {us, bytes}) so the perf trajectory is
+machine-trackable across PRs.
 
   PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
 """
@@ -22,6 +23,7 @@ from benchmarks import (
     fig4_malicious,
     kernel_bench,
     roofline,
+    round_bench,
     storage_opt,
     table1_accuracy,
 )
@@ -30,6 +32,7 @@ ALL = {
     "fig3_attack_probability": fig3_attack_probability.run,
     "consensus_cost": consensus_cost.run,
     "kernel_bench": kernel_bench.run,
+    "round_bench": round_bench.run,
     "storage_opt": storage_opt.run,
     "table1_accuracy": table1_accuracy.run,
     "fig4_malicious": fig4_malicious.run,
@@ -63,10 +66,13 @@ def main() -> None:
             print(f"{name},0.0,FAILED")
         print(f"# {name} took {time.time()-t0:.1f}s")
 
-    if "kernel_bench" in sections:
-        out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_kernels.json"
-        out.write_text(json.dumps(sections["kernel_bench"], indent=2) + "\n")
-        print(f"# wrote {out}")
+    root = pathlib.Path(__file__).resolve().parent.parent
+    for section, fname in (("kernel_bench", "BENCH_kernels.json"),
+                           ("round_bench", "BENCH_round.json")):
+        if section in sections:
+            out = root / fname
+            out.write_text(json.dumps(sections[section], indent=2) + "\n")
+            print(f"# wrote {out}")
     if failures:
         sys.exit(1)
 

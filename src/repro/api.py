@@ -1,0 +1,67 @@
+"""repro.api — one-call builders over the composable round pipeline.
+
+The single entrypoint examples and benchmarks build through:
+
+    from repro.api import build_runtime
+
+    rt = build_runtime(adapter, dataset, {"active_proportion": 0.3})
+    rt.run(rounds=10)
+
+``cfg`` may be a ``BFLCConfig`` (-> ``BFLCRuntime``), an ``FLConfig``
+(-> committee-free ``FLTrainer``), or a plain dict of config fields
+(``baseline=True`` selects the FL baseline).  ``stages`` swaps any round
+stage by registered name or bare callable — see ``repro.fl.pipeline``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Union
+
+from repro.fl.baselines import FLConfig, FLTrainer
+from repro.fl.runtime import BFLCConfig, BFLCRuntime
+
+ConfigLike = Union[BFLCConfig, FLConfig, Dict[str, Any], None]
+
+
+def build_config(cfg: ConfigLike = None, *, baseline: bool = False):
+    """dict / None -> config dataclass; dataclasses pass through."""
+    if cfg is None:
+        cfg = {}
+    if isinstance(cfg, dict):
+        return FLConfig(**cfg) if baseline else BFLCConfig(**cfg)
+    if isinstance(cfg, BFLCConfig):
+        if baseline:
+            raise ValueError(
+                "baseline=True contradicts a BFLCConfig — pass an FLConfig "
+                "(or a dict of FLConfig fields) for the committee-free "
+                "baseline"
+            )
+        return cfg
+    if isinstance(cfg, FLConfig):
+        return cfg
+    raise TypeError(
+        f"cfg must be BFLCConfig, FLConfig, dict, or None — got {type(cfg)!r}"
+    )
+
+
+def build_runtime(
+    adapter,
+    dataset,
+    cfg: ConfigLike = None,
+    *,
+    baseline: bool = False,
+    initial_params=None,
+    stages: Optional[Dict[str, object]] = None,
+):
+    """Builds the round runtime for a config.
+
+    Returns ``BFLCRuntime`` (chain + committee consensus) for a
+    ``BFLCConfig``, or ``FLTrainer`` (Basic FL / CwMed — same pipeline,
+    committee stages as no-ops) for an ``FLConfig``/``baseline=True``.
+    Both expose ``run(rounds, eval_every)``, ``run_round()``,
+    ``evaluate()``, and per-round ``stage_timings``."""
+    cfg = build_config(cfg, baseline=baseline)
+    if isinstance(cfg, FLConfig):
+        return FLTrainer(adapter, dataset, cfg,
+                         initial_params=initial_params, stages=stages)
+    return BFLCRuntime(adapter, dataset, cfg,
+                       initial_params=initial_params, stages=stages)

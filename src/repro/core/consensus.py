@@ -45,11 +45,16 @@ class CommitteeConsensus:
     def __init__(
         self,
         member_ids: Sequence[int],
-        score_fn: Callable[[int, object], float],
+        score_fn: Optional[Callable[[int, object], float]] = None,
         accept_threshold: float = 0.0,
         threshold_mode: str = "relative",   # "relative" | "absolute"
     ):
         """score_fn(member_id, update_payload) -> validation accuracy in [0,1].
+
+        May be omitted when member scores are computed in one batched
+        call *after* construction — bind them via ``bind_score_table``
+        before the first ``validate``; an unbound consensus refuses to
+        validate rather than silently scoring nothing.
 
         threshold_mode "relative": accept if median score >= accept_threshold
         * (running mean of accepted scores); "absolute": fixed cutoff.
@@ -62,7 +67,24 @@ class CommitteeConsensus:
         self.records: List[ValidationRecord] = []
         self._accepted_scores: List[float] = []
 
+    def bind_score_table(
+        self, table: Dict[int, Dict[int, float]]
+    ) -> None:
+        """Score from a precomputed ``{uploader: {member: score}}`` matrix
+        (e.g. the runtime's one-call vmapped P x Q accuracy matrix).
+
+        Holds a *reference*: rows added to ``table`` after binding are
+        visible, so a multi-cohort round binds once and keeps filling the
+        table.  With a table bound, ``validate``'s ``update`` argument is
+        the uploader id (the row key)."""
+        self.score_fn = lambda member, uploader: table[uploader][member]
+
     def validate(self, uploader: int, update) -> ValidationRecord:
+        if self.score_fn is None:
+            raise ValueError(
+                "CommitteeConsensus has no score_fn bound — pass score_fn "
+                "at construction or call bind_score_table() first"
+            )
         member_scores = {
             m: float(self.score_fn(m, update)) for m in self.member_ids
         }

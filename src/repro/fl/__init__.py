@@ -1,6 +1,13 @@
 from repro.fl.adapter import ModelAdapter, femnist_adapter
 from repro.fl.baselines import FLConfig, FLTrainer, train_standalone
-from repro.fl.runtime import BFLCConfig, BFLCRuntime
+from repro.fl.pipeline import (
+    REGISTRIES,
+    RoundContext,
+    RoundPipeline,
+    build_pipeline,
+    register,
+)
+from repro.fl.runtime import BFLCConfig, BFLCRuntime, RoundLog
 
 __all__ = [
     "ModelAdapter",
@@ -10,4 +17,10 @@ __all__ = [
     "train_standalone",
     "BFLCConfig",
     "BFLCRuntime",
+    "RoundLog",
+    "RoundContext",
+    "RoundPipeline",
+    "REGISTRIES",
+    "build_pipeline",
+    "register",
 ]

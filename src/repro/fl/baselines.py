@@ -1,24 +1,26 @@
 """Baselines the paper compares against (§V): Basic FL (FedAvg), CwMed, and
-stand-alone centralized training.  Same client/local-training substrate as
-BFLC so comparisons isolate the aggregation/consensus difference.
+stand-alone centralized training.  The federated baselines are the *same*
+``repro.fl.pipeline`` round the BFLC runtime uses, with every committee
+stage swapped for a no-op (uniform sampler, accept-all validator, pack-all
+packer, no elector/rewarder) — BFLC-vs-baseline comparisons share one code
+path, isolating the aggregation/consensus difference.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aggregation import aggregate_pytrees, apply_update
-from repro.core.attacks import ATTACKS
 from repro.data.synthetic import FederatedDataset
 from repro.fl.adapter import ModelAdapter
-from repro.fl.client import (
-    make_eval_fn,
-    make_local_train_fn,
-    sample_client_batches,
+from repro.fl.client import make_eval_fn, make_local_train_fn
+from repro.fl.pipeline import (
+    RoundContext,
+    baseline_stage_names,
+    build_pipeline,
 )
 
 
@@ -38,10 +40,14 @@ class FLConfig:
 
 
 class FLTrainer:
-    """Basic FL / CwMed: central-server aggregation, no validation."""
+    """Basic FL / CwMed: central-server aggregation, no validation.
+
+    The same stage pipeline as ``BFLCRuntime`` with the committee stages
+    as no-ops; swap any stage via ``stages={kind: name-or-callable}``."""
 
     def __init__(self, adapter: ModelAdapter, dataset: FederatedDataset,
-                 cfg: FLConfig, initial_params=None):
+                 cfg: FLConfig, initial_params=None,
+                 stages: Optional[Dict[str, object]] = None):
         self.adapter = adapter
         self.data = dataset
         self.cfg = cfg
@@ -56,39 +62,31 @@ class FLTrainer:
                        else adapter.init(jax.random.PRNGKey(cfg.seed)))
         self._local_train = make_local_train_fn(adapter, cfg.local_lr, cfg.momentum)
         self._eval = make_eval_fn(adapter)
+        self.pipeline = build_pipeline(
+            baseline_stage_names(cfg), stages, max_cohorts=1
+        )
         self.accuracies: List[float] = []
+        self.stage_timings: List[Dict[str, float]] = []
+        self._round = 0
 
     def evaluate(self) -> float:
         return self._eval(self.params, self.data.test_images, self.data.test_labels)
 
     def run_round(self):
-        cfg, rng = self.cfg, self.rng
-        n = self.data.num_clients
-        m = max(2, int(round(n * cfg.active_proportion)))
-        active = rng.choice(n, m, replace=False)
-
-        pairs = [
-            sample_client_batches(rng, self.data.client_images[i],
-                                  self.data.client_labels[i],
-                                  cfg.local_steps, cfg.local_batch)
-            for i in active
-        ]
-        xs = np.stack([p[0] for p in pairs])
-        ys = np.stack([p[1] for p in pairs])
-        stacked = self._local_train(self.params, xs, ys)
-        updates = [jax.tree.map(lambda x: x[i], stacked) for i in range(m)]
-        attack = ATTACKS[cfg.attack]
-        for idx, node in enumerate(active):
-            if int(node) in self.malicious:
-                updates[idx] = attack(
-                    rng, updates[idx], cfg.attack_sigma, ref=self.params
-                ) if cfg.attack == "gaussian" else attack(rng, updates[idx])
-
-        weights = None
-        if cfg.size_weighted and cfg.aggregation == "fedavg":
-            weights = [len(self.data.client_labels[i]) for i in active]
-        agg = aggregate_pytrees(updates, method=cfg.aggregation, weights=weights)
-        self.params = apply_update(self.params, agg)
+        ctx = RoundContext(
+            cfg=self.cfg,
+            rng=self.rng,
+            adapter=self.adapter,
+            data=self.data,
+            params=self.params,
+            round=self._round,
+            malicious=self.malicious,
+            local_train_fn=self._local_train,
+        )
+        self.pipeline.run(ctx)
+        self.params = ctx.new_params
+        self.stage_timings.append(dict(ctx.timings))
+        self._round += 1
 
     def run(self, rounds: int, eval_every: int = 5) -> List[float]:
         for r in range(rounds):

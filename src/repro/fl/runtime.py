@@ -14,26 +14,25 @@ Each round:
 
 Malicious behaviour (Gaussian-perturbation updates, collusive scoring) is
 injected per §V.B when configured.
+
+``BFLCRuntime`` is a thin facade: the five phases live in
+``repro.fl.pipeline`` as pluggable stages (Sampler, LocalTrainer,
+Validator, Packer, Aggregator, Elector, Rewarder), each swappable via a
+string-keyed registry.  Pass ``stages={"aggregator": "my_impl"}`` (a
+registered name or a bare callable) to swap any stage without touching
+the pipeline; per-stage wall-clock timings land in ``stage_timings``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import election as election_mod
-from repro.core.aggregation import (
-    aggregate_pytrees,
-    apply_update,
-    flatten_updates,
-)
-from repro.core.attacks import ATTACKS, CollusionPolicy
+from repro.core.attacks import CollusionPolicy
 from repro.core.blockchain import Chain
-from repro.core.consensus import CommitteeConsensus
-from repro.core.incentive import distribute_rewards
 from repro.core.node import Node, NodeManager
 from repro.data.synthetic import FederatedDataset
 from repro.fl.adapter import ModelAdapter
@@ -41,7 +40,12 @@ from repro.fl.client import (
     make_eval_fn,
     make_local_train_fn,
     make_score_matrix_fn,
-    sample_client_batches,
+)
+from repro.fl.pipeline import (
+    RoundContext,
+    build_pipeline,
+    default_stage_names,
+    fill_committee,
 )
 
 
@@ -92,14 +96,6 @@ class RoundLog:
     test_accuracy: Optional[float] = None
 
 
-def _unstack(tree, n: int):
-    return [jax.tree.map(lambda x: x[i], tree) for i in range(n)]
-
-
-def _stack(trees):
-    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
-
-
 class BFLCRuntime:
     def __init__(
         self,
@@ -107,6 +103,7 @@ class BFLCRuntime:
         dataset: FederatedDataset,
         cfg: BFLCConfig,
         initial_params=None,
+        stages: Optional[Dict[str, object]] = None,
     ):
         if cfg.quantize_chain and not cfg.use_kernels:
             # the quantized chain path IS the fused Pallas engine; there is
@@ -187,19 +184,15 @@ class BFLCRuntime:
                             replace=False).tolist()
         )
         self._fill_committee()
+        self.pipeline = build_pipeline(default_stage_names(cfg), stages)
         self.logs: List[RoundLog] = []
+        self.stage_timings: List[Dict[str, float]] = []
 
     def _fill_committee(self):
-        """Keep committee size exactly q_committee (shape stability).
-
-        Backfill prefers nodes with the best score history (the managers'
-        view of reputation) — random backfill re-opens the §IV.C induction
-        to takeover whenever a round packs fewer candidates than q."""
-        pool = [i for i in self.manager.active_ids() if i not in self.committee]
-        pool.sort(key=lambda i: -self.manager.nodes[i].latest_score)
-        while len(self.committee) < self.q_committee and pool:
-            self.committee.append(pool.pop(0))
-        self.committee = sorted(self.committee[: self.q_committee])
+        """Keep committee size exactly q_committee (see pipeline.fill_committee)."""
+        self.committee = fill_committee(
+            self.manager, self.committee, self.q_committee
+        )
 
     # ------------------------------------------------------------------
     def global_params(self):
@@ -211,180 +204,46 @@ class BFLCRuntime:
 
     # ------------------------------------------------------------------
     def run_round(self, eval_test: bool = False) -> RoundLog:
-        cfg, rng = self.cfg, self.rng
         t, params = self.chain.latest_model()
-
         committee = [i for i in self.committee if i in self.manager.nodes]
-
-        # committee validation data (fixed per round)
-        vpairs = [
-            sample_client_batches(
-                rng, self.data.client_images[j], self.data.client_labels[j],
-                1, cfg.val_batch,
-            )
-            for j in committee
-        ]
-        vx = np.stack([p[0][0] for p in vpairs])
-        vy = np.stack([p[1][0] for p in vpairs])
-
-        consensus = CommitteeConsensus(
-            committee,
-            score_fn=None,  # bound per cohort below
-            accept_threshold=cfg.accept_threshold,
+        ctx = RoundContext(
+            cfg=self.cfg,
+            rng=self.rng,
+            adapter=self.adapter,
+            data=self.data,
+            params=params,
+            round=t,
+            manager=self.manager,
+            chain=self.chain,
+            round_committee=committee,
+            committee=list(committee),
+            q_committee=self.q_committee,
+            p_trainers=self.p_trainers,
+            local_train_fn=self._local_train,
+            score_matrix_fn=self._score_matrix,
+            collusion=self._collusion,
         )
-
-        # Nodes submit updates until k QUALIFIED updates accumulate (the
-        # paper's aggregation trigger).  Packing unqualified updates just to
-        # reach k would force one poisoned update per round whenever honest
-        # trainers < k — the takeover leak found in testing.
-        all_updates: Dict[int, object] = {}
-        trainers_total: List[int] = []
-        attack = ATTACKS[cfg.attack]
-        for cohort in range(3):   # at most 3 cohorts per round (sim bound)
-            active = self.manager.sample_active(rng, cfg.active_proportion)
-            trainers = [
-                i for i in active
-                if i not in committee and i not in all_updates
-            ][: self.p_trainers]
-            if len(trainers) < self.p_trainers:
-                extra = [
-                    i for i in self.manager.active_ids()
-                    if i not in committee and i not in all_updates
-                    and i not in trainers
-                ]
-                need = min(self.p_trainers - len(trainers), len(extra))
-                if need > 0:
-                    trainers += rng.choice(
-                        extra, size=need, replace=False
-                    ).tolist()
-            if not trainers:
-                break
-
-            # (2) local training, batched over the cohort
-            pairs = [
-                sample_client_batches(
-                    rng, self.data.client_images[i],
-                    self.data.client_labels[i],
-                    cfg.local_steps, cfg.local_batch,
-                )
-                for i in trainers
-            ]
-            xs = np.stack([p[0] for p in pairs])
-            ys = np.stack([p[1] for p in pairs])
-            updates_stacked = self._local_train(params, xs, ys)
-            updates = _unstack(updates_stacked, len(trainers))
-            for idx, node_id in enumerate(trainers):
-                if self.manager.nodes[node_id].is_malicious:
-                    updates[idx] = attack(
-                        rng, updates[idx], cfg.attack_sigma, ref=params
-                    ) if cfg.attack == "gaussian" else attack(rng, updates[idx])
-
-            # (3) committee validation: the P x Q score matrix in one call
-            honest_scores = np.asarray(
-                self._score_matrix(params, _stack(updates), vx, vy)
-            )                                               # (P, Q)
-            score_table: Dict[int, Dict[int, float]] = {}
-            for i, uploader in enumerate(trainers):
-                row = {}
-                for j, member in enumerate(committee):
-                    s = float(honest_scores[i, j])
-                    if cfg.collusion:
-                        s = self._collusion.score(
-                            rng,
-                            self.manager.nodes[member].is_malicious,
-                            self.manager.nodes[uploader].is_malicious,
-                            s,
-                        )
-                    row[member] = s
-                score_table[uploader] = row
-            consensus.score_fn = lambda m, payload: score_table[payload][m]
-            for idx, uploader in enumerate(trainers):
-                consensus.validate(uploader, uploader)
-                all_updates[uploader] = updates[idx]
-            trainers_total += trainers
-            if len(consensus.accepted_records()) >= cfg.k_updates:
-                break
-
-        # (3b) pack the top-k QUALIFIED updates as update blocks; if the
-        # community could not produce k qualified updates (extreme malicious
-        # fractions), the best qualified one fills the remaining slots so the
-        # chain layout invariant holds (logged via duplicate uploader ids).
-        records = sorted(
-            consensus.accepted_records(), key=lambda r: -r.median_score
-        )[: cfg.k_updates]
-        if not records:  # nothing qualified: fall back to best available
-            records = sorted(
-                consensus.records, key=lambda r: -r.median_score
-            )[:1]
-        while len(records) < cfg.k_updates:
-            records.append(records[0])
-        packed_ids = [r.uploader for r in records]
-        packed_scores = [r.median_score for r in records]
-        packed_updates = [all_updates[u] for u in packed_ids]
-        trainers = trainers_total
-        weights = packed_scores if cfg.weight_by_score else None
-
-        if cfg.quantize_chain:
-            # quantized chain path: flatten the packed cohort once, quantize
-            # the whole (K, D) stack in one kernel launch, store the int8
-            # blobs as update blocks, and aggregate (4) STRAIGHT from the
-            # quantized representation via the fused one-pass kernel — the
-            # f32 stack never hits HBM.
-            from repro.kernels.ops import aggregate_quantized, quantize_stack
-
-            stack, unravel = flatten_updates(packed_updates)
-            q, s, d = quantize_stack(stack)
-            for i, (u, sc) in enumerate(zip(packed_ids, packed_scores)):
-                self.chain.append_update(
-                    {"q": q[i], "scales": s[i], "d": d}, u, sc, encoded=True
-                )
-                self.manager.nodes[u].score_history.append(sc)
-            agg = unravel(aggregate_quantized(
-                q, s, d, method=cfg.aggregation,
-                weights=None if weights is None else jnp.asarray(weights),
-                trim=cfg.trim,
-            ))
-        else:
-            for i, (u, sc) in enumerate(zip(packed_ids, packed_scores)):
-                self.chain.append_update(packed_updates[i], u, sc)
-                self.manager.nodes[u].score_history.append(sc)
-
-            # (4) aggregation trigger -> next model block
-            agg = aggregate_pytrees(
-                packed_updates, method=cfg.aggregation, weights=weights,
-                trim=cfg.trim, use_kernels=cfg.use_kernels,
-            )
-        new_params = apply_update(params, agg)
-        self.chain.append_model(new_params, t + 1)
-
-        # (5) election + incentive + housekeeping
-        cand = dict(zip(packed_ids, packed_scores))
-        self.committee = election_mod.elect(
-            cfg.election_method, rng, cand, self.q_committee
-        ) or committee
-        self._fill_committee()
-        distribute_rewards(self.manager, cand, cfg.reward_pool)
-        if cfg.kick_below >= 0:
-            for r in consensus.records:
-                if r.median_score < cfg.kick_below:
-                    self.manager.kick(r.uploader)
-        if cfg.prune_keep_rounds > 0:
-            self.chain.prune(cfg.prune_keep_rounds)
+        self.pipeline.run(ctx)
+        self.committee = ctx.committee
 
         mal_nodes = {i for i, nd in self.manager.nodes.items() if nd.is_malicious}
         log = RoundLog(
             round=t,
-            trainers=len(trainers),
+            trainers=len(ctx.trainers_total),
             committee=len(committee),
             accepted_malicious=sum(
-                1 for r in consensus.accepted_records() if r.uploader in mal_nodes
-            ),
-            packed_malicious=sum(1 for u in packed_ids if u in mal_nodes),
-            mean_packed_score=float(np.mean(packed_scores)) if packed_scores else 0.0,
-            consensus_validations=consensus.stats.validations,
+                1 for r in ctx.consensus.accepted_records()
+                if r.uploader in mal_nodes
+            ) if ctx.consensus is not None else 0,
+            packed_malicious=sum(1 for u in ctx.packed_ids if u in mal_nodes),
+            mean_packed_score=(float(np.mean(ctx.packed_scores))
+                               if ctx.packed_scores else 0.0),
+            consensus_validations=(ctx.consensus.stats.validations
+                                   if ctx.consensus is not None else 0),
             test_accuracy=self.evaluate() if eval_test else None,
         )
         self.logs.append(log)
+        self.stage_timings.append(dict(ctx.timings))
         return log
 
     def run(self, rounds: int, eval_every: int = 5) -> List[RoundLog]:

@@ -105,21 +105,19 @@ def run_lm(args):
 
 
 def run_fl(args):
+    from repro.api import build_runtime
     from repro.data import make_femnist_like
-    from repro.fl import (
-        BFLCConfig, BFLCRuntime, FLConfig, FLTrainer, femnist_adapter,
-    )
+    from repro.fl import femnist_adapter
 
     ds = make_femnist_like(
         num_clients=args.clients, mean_samples=80, test_size=1000, seed=1
     )
     adapter = femnist_adapter(width=16)
-    cfg = BFLCConfig(
+    rt = build_runtime(adapter, ds, dict(
         active_proportion=args.active, k_updates=args.k_updates,
         local_steps=args.local_steps, malicious_fraction=args.malicious,
         seed=args.seed,
-    )
-    rt = BFLCRuntime(adapter, ds, cfg)
+    ))
     logs = rt.run(args.rounds, eval_every=args.log_every)
     for lg in logs:
         if lg.test_accuracy is not None:

@@ -1,0 +1,150 @@
+"""The composable round pipeline: registries, stage swapping through the
+public API, per-stage timings, and the repro.api facade."""
+import numpy as np
+import pytest
+
+from repro.api import build_config, build_runtime
+from repro.core.blockchain import UPDATE
+from repro.data import make_femnist_like
+from repro.fl import (
+    BFLCConfig,
+    BFLCRuntime,
+    FLConfig,
+    FLTrainer,
+    femnist_adapter,
+)
+from repro.fl import pipeline as pl
+
+
+@pytest.fixture(scope="module")
+def small_ds():
+    return make_femnist_like(
+        num_clients=24, mean_samples=40, test_size=200, seed=3
+    )
+
+
+@pytest.fixture(scope="module")
+def adapter():
+    return femnist_adapter(width=8)
+
+
+CFG_KW = dict(active_proportion=0.5, committee_fraction=0.3,
+              k_updates=4, local_steps=2, local_batch=8, seed=0)
+
+
+def test_registries_hold_defaults():
+    assert set(pl.STAGE_KINDS) == {
+        "sampler", "local_trainer", "validator", "packer", "aggregator",
+        "elector", "rewarder",
+    }
+    assert {"active", "uniform"} <= set(pl.SAMPLERS)
+    assert "local_sgd" in pl.LOCAL_TRAINERS
+    assert {"committee", "accept_all"} <= set(pl.VALIDATORS)
+    assert {"top_k", "top_k_int8", "all"} <= set(pl.PACKERS)
+    # the PR-1 engines are two registered Aggregator implementations
+    assert {"pytree", "fused_int8"} <= set(pl.AGGREGATORS)
+    assert {"by_candidates", "none"} <= set(pl.ELECTORS)
+    assert {"proportional", "none"} <= set(pl.REWARDERS)
+
+
+def test_resolve_unknown_name_lists_registered():
+    with pytest.raises(KeyError, match="no aggregator named 'bogus'"):
+        pl.resolve("aggregator", "bogus")
+    with pytest.raises(ValueError, match="unknown stage kinds"):
+        pl.build_pipeline(pl.default_stage_names(BFLCConfig()),
+                          {"not_a_stage": "x"})
+
+
+def test_default_wiring_follows_config():
+    names = pl.default_stage_names(BFLCConfig())
+    assert names["packer"] == "top_k" and names["aggregator"] == "pytree"
+    q = pl.default_stage_names(
+        BFLCConfig(quantize_chain=True, use_kernels=True)
+    )
+    assert q["packer"] == "top_k_int8" and q["aggregator"] == "fused_int8"
+
+
+def test_custom_registered_stage_swaps_in(small_ds, adapter):
+    """Acceptance: a custom registered stage (a no-committee Packer that
+    reproduces Basic FL's unweighted selection) drops in via the runtime
+    facade without modifying repro.fl.pipeline internals."""
+
+    @pl.register("packer", "first_k_no_committee")
+    def pack_first_k(ctx):
+        cfg = ctx.cfg
+        ids = list(ctx.updates)[: cfg.k_updates]
+        while len(ids) < cfg.k_updates:   # chain layout needs exactly k
+            ids.append(ids[0])
+        ctx.packed_ids = ids
+        ctx.packed_scores = [0.0] * len(ids)
+        ctx.packed_updates = [ctx.updates[u] for u in ids]
+        ctx.weights = None                # unweighted, like Basic FL
+        for i, u in enumerate(ids):
+            ctx.chain.append_update(ctx.packed_updates[i], u, 0.0)
+
+    rt = BFLCRuntime(adapter, small_ds, BFLCConfig(**CFG_KW),
+                     stages={"packer": "first_k_no_committee",
+                             "elector": "none"})
+    c0 = list(rt.committee)
+    log = rt.run_round()
+    assert rt.chain.verify()
+    assert rt.chain.height == 1 + (CFG_KW["k_updates"] + 1)
+    assert rt.committee == c0             # elector "none" kept it static
+    packed = [b.uploader for b in rt.chain.blocks if b.kind == UPDATE]
+    assert len(packed) == CFG_KW["k_updates"]
+    assert log.mean_packed_score == 0.0   # scores bypassed the committee
+
+
+def test_top_k_packer_without_consensus_raises(small_ds, adapter):
+    rt = BFLCRuntime(adapter, small_ds, BFLCConfig(**CFG_KW),
+                     stages={"validator": "accept_all"})
+    with pytest.raises(RuntimeError, match="consensus-producing validator"):
+        rt.run_round()
+
+
+def test_callable_stage_override(small_ds, adapter):
+    seen = []
+
+    def spy_rewarder(ctx):
+        seen.append(ctx.round)
+
+    rt = BFLCRuntime(adapter, small_ds, BFLCConfig(**CFG_KW),
+                     stages={"rewarder": spy_rewarder})
+    rt.run_round()
+    assert seen == [0]
+
+
+def test_stage_timings_populated(small_ds, adapter):
+    rt = BFLCRuntime(adapter, small_ds, BFLCConfig(**CFG_KW))
+    rt.run_round()
+    (timings,) = rt.stage_timings
+    assert set(pl.STAGE_TIMING_KEYS) <= set(timings)
+    assert all(v >= 0 for v in timings.values())
+
+    fl = FLTrainer(adapter, small_ds,
+                   FLConfig(active_proportion=0.4, local_steps=2,
+                            local_batch=8, seed=0))
+    fl.run_round()
+    assert "train" in fl.stage_timings[0]
+
+
+def test_api_build_runtime_dispatch(small_ds, adapter):
+    rt = build_runtime(adapter, small_ds, dict(CFG_KW))
+    assert isinstance(rt, BFLCRuntime)
+    log = rt.run_round()
+    assert rt.chain.verify() and log.round == 0
+
+    fl = build_runtime(adapter, small_ds,
+                       {"active_proportion": 0.4, "local_steps": 2,
+                        "local_batch": 8, "seed": 0}, baseline=True)
+    assert isinstance(fl, FLTrainer)
+    fl.run_round()
+    assert 0.0 <= fl.evaluate() <= 1.0
+
+    assert isinstance(build_config(None), BFLCConfig)
+    assert isinstance(build_config(FLConfig()), FLConfig)
+    assert isinstance(build_config(FLConfig(), baseline=True), FLConfig)
+    with pytest.raises(TypeError):
+        build_config(42)
+    with pytest.raises(ValueError, match="contradicts"):
+        build_config(BFLCConfig(), baseline=True)

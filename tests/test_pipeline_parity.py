@@ -1,0 +1,308 @@
+"""Refactor parity: the stage pipeline reproduces the pre-refactor
+monolithic round loop bit-for-bit.
+
+``LegacyBFLCRuntime`` overrides ``run_round`` with a verbatim copy of the
+monolith this PR decomposed (same ``__init__`` via inheritance, so both
+start from the same RNG stream and genesis block).  A fixed-seed run
+through the new pipeline must produce an identical chain — heights,
+block hashes, packed uploader ids — and identical ``RoundLog``s, for
+both the f32 and ``quantize_chain=True`` paths.  ``LegacyFLTrainer``
+does the same for the Basic FL / CwMed baseline.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.aggregation import (
+    aggregate_pytrees,
+    apply_update,
+    flatten_updates,
+)
+from repro.core import election as election_mod
+from repro.core.attacks import ATTACKS
+from repro.core.blockchain import UPDATE
+from repro.core.consensus import CommitteeConsensus
+from repro.core.incentive import distribute_rewards
+from repro.data import make_femnist_like
+from repro.fl import (
+    BFLCConfig,
+    BFLCRuntime,
+    FLConfig,
+    FLTrainer,
+    femnist_adapter,
+)
+from repro.fl.client import sample_client_batches
+from repro.fl.pipeline import _stack, _unstack
+from repro.fl.runtime import RoundLog
+
+
+class LegacyBFLCRuntime(BFLCRuntime):
+    """The pre-refactor ~180-line monolithic round, verbatim."""
+
+    def run_round(self, eval_test: bool = False) -> RoundLog:
+        cfg, rng = self.cfg, self.rng
+        t, params = self.chain.latest_model()
+
+        committee = [i for i in self.committee if i in self.manager.nodes]
+
+        vpairs = [
+            sample_client_batches(
+                rng, self.data.client_images[j], self.data.client_labels[j],
+                1, cfg.val_batch,
+            )
+            for j in committee
+        ]
+        vx = np.stack([p[0][0] for p in vpairs])
+        vy = np.stack([p[1][0] for p in vpairs])
+
+        consensus = CommitteeConsensus(
+            committee,
+            score_fn=None,  # bound per cohort below
+            accept_threshold=cfg.accept_threshold,
+        )
+
+        all_updates = {}
+        trainers_total = []
+        attack = ATTACKS[cfg.attack]
+        for cohort in range(3):
+            active = self.manager.sample_active(rng, cfg.active_proportion)
+            trainers = [
+                i for i in active
+                if i not in committee and i not in all_updates
+            ][: self.p_trainers]
+            if len(trainers) < self.p_trainers:
+                extra = [
+                    i for i in self.manager.active_ids()
+                    if i not in committee and i not in all_updates
+                    and i not in trainers
+                ]
+                need = min(self.p_trainers - len(trainers), len(extra))
+                if need > 0:
+                    trainers += rng.choice(
+                        extra, size=need, replace=False
+                    ).tolist()
+            if not trainers:
+                break
+
+            pairs = [
+                sample_client_batches(
+                    rng, self.data.client_images[i],
+                    self.data.client_labels[i],
+                    cfg.local_steps, cfg.local_batch,
+                )
+                for i in trainers
+            ]
+            xs = np.stack([p[0] for p in pairs])
+            ys = np.stack([p[1] for p in pairs])
+            updates_stacked = self._local_train(params, xs, ys)
+            updates = _unstack(updates_stacked, len(trainers))
+            for idx, node_id in enumerate(trainers):
+                if self.manager.nodes[node_id].is_malicious:
+                    updates[idx] = attack(
+                        rng, updates[idx], cfg.attack_sigma, ref=params
+                    ) if cfg.attack == "gaussian" else attack(rng, updates[idx])
+
+            honest_scores = np.asarray(
+                self._score_matrix(params, _stack(updates), vx, vy)
+            )
+            score_table = {}
+            for i, uploader in enumerate(trainers):
+                row = {}
+                for j, member in enumerate(committee):
+                    s = float(honest_scores[i, j])
+                    if cfg.collusion:
+                        s = self._collusion.score(
+                            rng,
+                            self.manager.nodes[member].is_malicious,
+                            self.manager.nodes[uploader].is_malicious,
+                            s,
+                        )
+                    row[member] = s
+                score_table[uploader] = row
+            consensus.score_fn = lambda m, payload: score_table[payload][m]
+            for idx, uploader in enumerate(trainers):
+                consensus.validate(uploader, uploader)
+                all_updates[uploader] = updates[idx]
+            trainers_total += trainers
+            if len(consensus.accepted_records()) >= cfg.k_updates:
+                break
+
+        records = sorted(
+            consensus.accepted_records(), key=lambda r: -r.median_score
+        )[: cfg.k_updates]
+        if not records:
+            records = sorted(
+                consensus.records, key=lambda r: -r.median_score
+            )[:1]
+        while len(records) < cfg.k_updates:
+            records.append(records[0])
+        packed_ids = [r.uploader for r in records]
+        packed_scores = [r.median_score for r in records]
+        packed_updates = [all_updates[u] for u in packed_ids]
+        trainers = trainers_total
+        weights = packed_scores if cfg.weight_by_score else None
+
+        if cfg.quantize_chain:
+            import jax.numpy as jnp
+            from repro.kernels.ops import aggregate_quantized, quantize_stack
+
+            stack, unravel = flatten_updates(packed_updates)
+            q, s, d = quantize_stack(stack)
+            for i, (u, sc) in enumerate(zip(packed_ids, packed_scores)):
+                self.chain.append_update(
+                    {"q": q[i], "scales": s[i], "d": d}, u, sc, encoded=True
+                )
+                self.manager.nodes[u].score_history.append(sc)
+            agg = unravel(aggregate_quantized(
+                q, s, d, method=cfg.aggregation,
+                weights=None if weights is None else jnp.asarray(weights),
+                trim=cfg.trim,
+            ))
+        else:
+            for i, (u, sc) in enumerate(zip(packed_ids, packed_scores)):
+                self.chain.append_update(packed_updates[i], u, sc)
+                self.manager.nodes[u].score_history.append(sc)
+
+            agg = aggregate_pytrees(
+                packed_updates, method=cfg.aggregation, weights=weights,
+                trim=cfg.trim, use_kernels=cfg.use_kernels,
+            )
+        new_params = apply_update(params, agg)
+        self.chain.append_model(new_params, t + 1)
+
+        cand = dict(zip(packed_ids, packed_scores))
+        self.committee = election_mod.elect(
+            cfg.election_method, rng, cand, self.q_committee
+        ) or committee
+        self._fill_committee()
+        distribute_rewards(self.manager, cand, cfg.reward_pool)
+        if cfg.kick_below >= 0:
+            for r in consensus.records:
+                if r.median_score < cfg.kick_below:
+                    self.manager.kick(r.uploader)
+        if cfg.prune_keep_rounds > 0:
+            self.chain.prune(cfg.prune_keep_rounds)
+
+        mal_nodes = {i for i, nd in self.manager.nodes.items() if nd.is_malicious}
+        log = RoundLog(
+            round=t,
+            trainers=len(trainers),
+            committee=len(committee),
+            accepted_malicious=sum(
+                1 for r in consensus.accepted_records() if r.uploader in mal_nodes
+            ),
+            packed_malicious=sum(1 for u in packed_ids if u in mal_nodes),
+            mean_packed_score=float(np.mean(packed_scores)) if packed_scores else 0.0,
+            consensus_validations=consensus.stats.validations,
+            test_accuracy=self.evaluate() if eval_test else None,
+        )
+        self.logs.append(log)
+        return log
+
+
+class LegacyFLTrainer(FLTrainer):
+    """The pre-refactor baseline round, verbatim."""
+
+    def run_round(self):
+        cfg, rng = self.cfg, self.rng
+        n = self.data.num_clients
+        m = max(2, int(round(n * cfg.active_proportion)))
+        active = rng.choice(n, m, replace=False)
+
+        pairs = [
+            sample_client_batches(rng, self.data.client_images[i],
+                                  self.data.client_labels[i],
+                                  cfg.local_steps, cfg.local_batch)
+            for i in active
+        ]
+        xs = np.stack([p[0] for p in pairs])
+        ys = np.stack([p[1] for p in pairs])
+        stacked = self._local_train(self.params, xs, ys)
+        updates = [jax.tree.map(lambda x: x[i], stacked) for i in range(m)]
+        attack = ATTACKS[cfg.attack]
+        for idx, node in enumerate(active):
+            if int(node) in self.malicious:
+                updates[idx] = attack(
+                    rng, updates[idx], cfg.attack_sigma, ref=self.params
+                ) if cfg.attack == "gaussian" else attack(rng, updates[idx])
+
+        weights = None
+        if cfg.size_weighted and cfg.aggregation == "fedavg":
+            weights = [len(self.data.client_labels[i]) for i in active]
+        agg = aggregate_pytrees(updates, method=cfg.aggregation, weights=weights)
+        self.params = apply_update(self.params, agg)
+
+
+@pytest.fixture(scope="module")
+def small_ds():
+    return make_femnist_like(
+        num_clients=24, mean_samples=40, test_size=200, seed=3
+    )
+
+
+@pytest.fixture(scope="module")
+def adapter():
+    return femnist_adapter(width=8)
+
+
+def _chain_fingerprint(chain):
+    return (
+        chain.height,
+        [b.hash for b in chain.blocks],
+        [b.uploader for b in chain.blocks if b.kind == UPDATE],
+        [b.score for b in chain.blocks if b.kind == UPDATE],
+    )
+
+
+def _run_both(small_ds, adapter, cfg, rounds=2):
+    new = BFLCRuntime(adapter, small_ds, cfg)
+    legacy = LegacyBFLCRuntime(adapter, small_ds, cfg)
+    new_logs = new.run(rounds, eval_every=rounds)
+    legacy_logs = legacy.run(rounds, eval_every=rounds)
+    return new, legacy, new_logs, legacy_logs
+
+
+CFG_KW = dict(active_proportion=0.5, committee_fraction=0.3,
+              k_updates=4, local_steps=3, local_batch=8,
+              malicious_fraction=0.25, attack_sigma=1.5, seed=0)
+
+
+def test_pipeline_parity_f32(small_ds, adapter):
+    cfg = BFLCConfig(**CFG_KW)
+    new, legacy, new_logs, legacy_logs = _run_both(small_ds, adapter, cfg)
+    assert _chain_fingerprint(new.chain) == _chain_fingerprint(legacy.chain)
+    assert new_logs == legacy_logs
+    assert new.committee == legacy.committee
+    assert new.chain.verify() and legacy.chain.verify()
+
+
+def test_pipeline_parity_quantized(small_ds, adapter):
+    cfg = BFLCConfig(quantize_chain=True, use_kernels=True, **CFG_KW)
+    new, legacy, new_logs, legacy_logs = _run_both(small_ds, adapter, cfg)
+    assert _chain_fingerprint(new.chain) == _chain_fingerprint(legacy.chain)
+    assert new_logs == legacy_logs
+    # int8 blobs on chain in both
+    assert new.chain.blocks[1].encoded and legacy.chain.blocks[1].encoded
+
+
+def test_pipeline_parity_rewards_and_membership(small_ds, adapter):
+    cfg = BFLCConfig(kick_below=0.05, **CFG_KW)
+    new, legacy, _, _ = _run_both(small_ds, adapter, cfg)
+    assert sorted(new.manager.nodes) == sorted(legacy.manager.nodes)
+    assert new.manager.blacklist == legacy.manager.blacklist
+    assert {i: n.tokens for i, n in new.manager.nodes.items()} == \
+           {i: n.tokens for i, n in legacy.manager.nodes.items()}
+
+
+def test_baseline_parity(small_ds, adapter):
+    for method in ("fedavg", "cwmed"):
+        kw = dict(active_proportion=0.4, local_steps=3, local_batch=8,
+                  aggregation=method, malicious_fraction=0.25, seed=0)
+        new = FLTrainer(adapter, small_ds, FLConfig(**kw))
+        legacy = LegacyFLTrainer(adapter, small_ds, FLConfig(**kw))
+        new.run(2, eval_every=2)
+        legacy.run(2, eval_every=2)
+        assert new.accuracies == legacy.accuracies
+        for a, b in zip(jax.tree.leaves(new.params),
+                        jax.tree.leaves(legacy.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
