@@ -1,11 +1,19 @@
 """Round-loop stage timings: where a BFLC round spends its wall clock.
 
-Runs a small community through the stage pipeline for both aggregation
-engines (f32 ``pytree`` and fused ``int8``) and reports the mean
-per-stage time from ``RoundContext.timings`` (round 0 is dropped — it
-pays XLA compilation).  ``benchmarks.run`` snapshots these rows to
-``BENCH_round.json`` so round-loop perf is tracked across PRs alongside
-``BENCH_kernels.json``.
+Runs a small community through the stage pipeline for the f32 (``pytree``)
+and fused-int8 engines, plus the sharded multi-device engine at each
+available device count, and reports the mean per-stage time from
+``RoundContext.timings``.  Compilation is hoisted out of the timed loop:
+every runtime first runs ``WARMUP`` throwaway rounds (XLA compilation +
+first-shape retraces land there, and ``RoundPipeline._timed`` blocks on
+stage outputs, the same warmup-blocking discipline as ``common.time_us``),
+then the timing window opens on steady-state rounds only.
+
+``benchmarks.run`` snapshots these rows to ``BENCH_round.json`` so
+round-loop perf — including sharded train/aggregate scaling with device
+count — is tracked across PRs alongside ``BENCH_kernels.json``.  The
+multi-device rows need forced host devices; ``benchmarks.run`` sets
+``--xla_force_host_platform_device_count=8`` before jax initializes.
 """
 from __future__ import annotations
 
@@ -17,35 +25,68 @@ from repro.data import make_femnist_like
 from repro.fl import femnist_adapter
 from repro.fl.pipeline import STAGE_TIMING_KEYS
 
+WARMUP = 2   # rounds whose timings are dropped (compilation / retraces)
+
+
+def _steady_timings(rt, rounds: int):
+    """Warmed-up per-round stage timings: WARMUP rounds run and are
+    discarded before the timed window opens."""
+    rt.run(WARMUP, eval_every=WARMUP + 1)
+    rt.stage_timings.clear()
+    rt.run(rounds, eval_every=rounds + 1)
+    return rt.stage_timings
+
+
+def _emit_variant(name: str, timings) -> None:
+    total = 0.0
+    for key in STAGE_TIMING_KEYS:
+        us = float(np.mean([t[key] for t in timings])) * 1e6
+        total += us
+        emit(f"round_{name}_{key}", us)
+    emit(f"round_{name}_total", total,
+         f"rounds={len(timings)};stages={len(STAGE_TIMING_KEYS)}")
+
 
 def run(full: bool = False):
-    clients = 80 if full else 40
-    rounds = 8 if full else 4
+    import jax
+
+    from repro.launch.mesh import make_round_mesh
+
+    # community sized so p_trainers (= n_active - q_committee) lands on a
+    # multiple of 8: the sharded rows then measure scaling, not padding
+    # (42 clients -> 21 active, q=5, P=16; 84 -> 42 active, q=10, P=32)
+    clients = 84 if full else 42
+    rounds = 6 if full else 3
     ds = make_femnist_like(num_clients=clients, mean_samples=60,
                            test_size=400, seed=2)
     adapter = femnist_adapter(width=16 if full else 8)
 
-    base = dict(active_proportion=0.4, committee_fraction=0.3,
+    base = dict(active_proportion=0.5, committee_fraction=0.25,
                 k_updates=6, local_steps=10, local_batch=32, seed=0)
-    variants = {
-        "f32": dict(base),
-        "int8": dict(base, quantize_chain=True, use_kernels=True),
-    }
+    int8 = dict(base, quantize_chain=True, use_kernels=True)
 
-    print("# round-loop per-stage timings (us, mean over post-compile rounds)")
+    print("# round-loop per-stage timings (us, mean over steady-state "
+          "rounds; compilation paid in warmup rounds)")
     print("variant_stage,us")
-    for variant, cfg in variants.items():
-        rt = build_runtime(adapter, ds, cfg)
-        rt.run(rounds, eval_every=rounds + 1)
+    for variant, cfg in (("f32", base), ("int8", int8)):
+        rt = build_runtime(adapter, ds, dict(cfg))
+        _emit_variant(variant, _steady_timings(rt, rounds))
         assert rt.chain.verify()
-        steady = rt.stage_timings[1:]     # round 0 pays compilation
-        total = 0.0
-        for key in STAGE_TIMING_KEYS:
-            us = float(np.mean([t[key] for t in steady])) * 1e6
-            total += us
-            emit(f"round_{variant}_{key}", us)
-        emit(f"round_{variant}_total", total,
-             f"rounds={len(steady)};stages={len(STAGE_TIMING_KEYS)}")
+
+    # sharded engine: train shard_mapped over the data axis, aggregation
+    # D-sharded — one row set per device count so BENCH_round.json tracks
+    # scaling (on CPU the forced devices share the host's cores: train
+    # scales until the core budget is spent, aggregate is bandwidth-bound)
+    ndevs = [n for n in (1, 2, 4, 8) if n <= len(jax.devices())]
+    if len(ndevs) < 2:
+        print("# (single device only: run under "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+              "for the scaling rows)")
+    for ndev in ndevs:
+        rt = build_runtime(adapter, ds, dict(int8),
+                           mesh=make_round_mesh(ndev))
+        _emit_variant(f"sharded_dev{ndev}", _steady_timings(rt, rounds))
+        assert rt.chain.verify()
 
 
 if __name__ == "__main__":

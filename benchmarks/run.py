@@ -15,6 +15,17 @@ import sys
 import time
 import traceback
 
+from repro.hostdevices import force_host_devices
+
+# round_bench's sharded-engine rows need multiple devices; the flag must
+# land before jax initializes its backend (first device query), i.e. before
+# any benchmark runs.  An externally-set force_host flag wins.  NOTE: this
+# applies to EVERY section (single-device work still runs on device 0, but
+# the XLA CPU thread-pool layout differs) — BENCH_kernels.json and
+# BENCH_round.json snapshots are regenerated under this environment since
+# PR 3; don't compare them against pre-PR-3 single-device numbers.
+force_host_devices()
+
 from benchmarks import common
 from benchmarks import (
     committee_ablation,

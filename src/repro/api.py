@@ -51,6 +51,7 @@ def build_runtime(
     baseline: bool = False,
     initial_params=None,
     stages: Optional[Dict[str, object]] = None,
+    mesh=None,
 ):
     """Builds the round runtime for a config.
 
@@ -58,10 +59,19 @@ def build_runtime(
     ``BFLCConfig``, or ``FLTrainer`` (Basic FL / CwMed — same pipeline,
     committee stages as no-ops) for an ``FLConfig``/``baseline=True``.
     Both expose ``run(rounds, eval_every)``, ``run_round()``,
-    ``evaluate()``, and per-round ``stage_timings``."""
+    ``evaluate()``, and per-round ``stage_timings``.
+
+    ``mesh`` (e.g. ``repro.launch.mesh.make_round_mesh(8)``) selects the
+    sharded multi-device round engine: local training is shard_mapped over
+    the mesh's data axis (``local_sgd_sharded``), and with
+    ``quantize_chain=True`` packing + aggregation run D-sharded
+    (``top_k_int8_sharded`` / ``fused_int8_sharded``).  ``stages`` still
+    overrides any stage by name or callable."""
     cfg = build_config(cfg, baseline=baseline)
     if isinstance(cfg, FLConfig):
         return FLTrainer(adapter, dataset, cfg,
-                         initial_params=initial_params, stages=stages)
+                         initial_params=initial_params, stages=stages,
+                         mesh=mesh)
     return BFLCRuntime(adapter, dataset, cfg,
-                       initial_params=initial_params, stages=stages)
+                       initial_params=initial_params, stages=stages,
+                       mesh=mesh)

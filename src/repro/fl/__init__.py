@@ -9,6 +9,9 @@ from repro.fl.pipeline import (
 )
 from repro.fl.runtime import BFLCConfig, BFLCRuntime, RoundLog
 
+# the sharded multi-device stage set (repro.fl.sharded) registers itself
+# when build_pipeline runs — no import needed here
+
 __all__ = [
     "ModelAdapter",
     "femnist_adapter",

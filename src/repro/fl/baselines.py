@@ -47,7 +47,7 @@ class FLTrainer:
 
     def __init__(self, adapter: ModelAdapter, dataset: FederatedDataset,
                  cfg: FLConfig, initial_params=None,
-                 stages: Optional[Dict[str, object]] = None):
+                 stages: Optional[Dict[str, object]] = None, mesh=None):
         self.adapter = adapter
         self.data = dataset
         self.cfg = cfg
@@ -62,8 +62,16 @@ class FLTrainer:
                        else adapter.init(jax.random.PRNGKey(cfg.seed)))
         self._local_train = make_local_train_fn(adapter, cfg.local_lr, cfg.momentum)
         self._eval = make_eval_fn(adapter)
+        self.mesh = mesh
+        self._sharded_train = None
+        if mesh is not None:
+            from repro.fl.client import make_sharded_local_train_fn
+
+            self._sharded_train = make_sharded_local_train_fn(
+                adapter, cfg.local_lr, mesh, momentum=cfg.momentum
+            )
         self.pipeline = build_pipeline(
-            baseline_stage_names(cfg), stages, max_cohorts=1
+            baseline_stage_names(cfg, mesh), stages, max_cohorts=1
         )
         self.accuracies: List[float] = []
         self.stage_timings: List[Dict[str, float]] = []
@@ -82,6 +90,8 @@ class FLTrainer:
             round=self._round,
             malicious=self.malicious,
             local_train_fn=self._local_train,
+            mesh=self.mesh,
+            sharded_train_fn=self._sharded_train,
         )
         self.pipeline.run(ctx)
         self.params = ctx.new_params

@@ -21,11 +21,12 @@ import numpy as np
 from repro.fl.adapter import ModelAdapter
 
 
-def make_local_train_fn(adapter: ModelAdapter, lr: float, momentum: float = 0.0):
-    """Returns train(params, xs, ys) vmapped over a leading client axis.
+def make_one_client_fn(adapter: ModelAdapter, lr: float, momentum: float = 0.0):
+    """The single-client local-SGD program: (params, xs, ys) -> update.
 
-    xs: (P, steps, batch, ...), ys: (P, steps, batch).  Output: update pytree
-    stacked over P (update = locally-trained params - global params)."""
+    xs: (steps, batch, ...), ys: (steps, batch).  Both the vmapped
+    single-device trainer and the shard_mapped multi-device trainer wrap
+    exactly this function, so their per-client math is identical."""
 
     def one_client(params, xs, ys):
         def step(carry, xy):
@@ -40,7 +41,38 @@ def make_local_train_fn(adapter: ModelAdapter, lr: float, momentum: float = 0.0)
         (final, _), _ = jax.lax.scan(step, (params, mu0), (xs, ys))
         return jax.tree.map(lambda a, b: a - b, final, params)
 
+    return one_client
+
+
+def make_local_train_fn(adapter: ModelAdapter, lr: float, momentum: float = 0.0):
+    """Returns train(params, xs, ys) vmapped over a leading client axis.
+
+    xs: (P, steps, batch, ...), ys: (P, steps, batch).  Output: update pytree
+    stacked over P (update = locally-trained params - global params)."""
+    one_client = make_one_client_fn(adapter, lr, momentum)
     return jax.jit(jax.vmap(one_client, in_axes=(None, 0, 0)))
+
+
+def make_sharded_local_train_fn(adapter: ModelAdapter, lr: float, mesh,
+                                momentum: float = 0.0, axis: str = "data"):
+    """The P-client vmapped program shard_mapped over the mesh's data axis.
+
+    Each device scans its (P / ndev)-client shard of the stacked batches
+    (params replicated in, update stack sharded out over the leading client
+    axis — one all-gather when the host unstacks).  The caller pads P to a
+    multiple of the axis size; per-client results are independent, so the
+    padded rows are sliced off without affecting real clients."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.shard_compat import shard_map
+
+    vmapped = jax.vmap(make_one_client_fn(adapter, lr, momentum),
+                       in_axes=(None, 0, 0))
+    return jax.jit(shard_map(
+        vmapped, mesh=mesh,
+        in_specs=(P(), P(axis), P(axis)),
+        out_specs=P(axis),
+    ))
 
 
 def make_score_matrix_fn(adapter: ModelAdapter):

@@ -26,8 +26,9 @@ module exposes the round that way:
 committee stages swapped for no-ops — baseline comparisons share one
 code path.  The f32 (``pytree``) and fused-int8 (``fused_int8``)
 aggregation engines are two registered ``Aggregator`` implementations;
-a sharded multi-device reducer slots in as a third without touching the
-round loop.
+the sharded multi-device engine (``local_sgd_sharded`` /
+``top_k_int8_sharded`` / ``fused_int8_sharded``, in ``repro.fl.sharded``)
+is exactly such a third set — registered stages, zero round-loop edits.
 """
 from __future__ import annotations
 
@@ -90,6 +91,12 @@ class RoundContext:
     score_matrix_fn: Any = None
     collusion: Any = None                  # CollusionPolicy
     malicious: Optional[Set[int]] = None   # baseline ground truth (no manager)
+    # sharded round engine (populated when the runtime was built with a
+    # mesh; see repro.fl.sharded for the stages that consume these)
+    mesh: Any = None                       # 1-D ("data",) device mesh
+    sharded_train_fn: Any = None           # shard_mapped local-SGD program
+    sharded_quantize_fn: Any = None        # per-shard int8 stack codec
+    sharded_agg_fn: Any = None             # D-sharded fused int8 reducer
     # per-cohort state (overwritten each cohort)
     cohort: int = 0
     trainers: List[int] = field(default_factory=list)
@@ -268,27 +275,35 @@ class RoundPipeline:
         return ctx
 
 
-def default_stage_names(cfg) -> Dict[str, str]:
+def default_stage_names(cfg, mesh=None) -> Dict[str, str]:
     """The BFLC wiring for a config: quantize_chain flips the packer +
-    aggregator pair to the fused-int8 engine."""
+    aggregator pair to the fused-int8 engine; a mesh flips local training
+    (and, when quantized, the packer + aggregator) to the sharded
+    multi-device engine (repro.fl.sharded)."""
     quantized = bool(getattr(cfg, "quantize_chain", False))
-    return {
+    sharded = mesh is not None
+    names = {
         "sampler": "active",
-        "local_trainer": "local_sgd",
+        "local_trainer": "local_sgd_sharded" if sharded else "local_sgd",
         "validator": "committee",
         "packer": "top_k_int8" if quantized else "top_k",
         "aggregator": "fused_int8" if quantized else "pytree",
         "elector": "by_candidates",
         "rewarder": "proportional",
     }
+    if sharded and quantized:
+        names["packer"] = "top_k_int8_sharded"
+        names["aggregator"] = "fused_int8_sharded"
+    return names
 
 
-def baseline_stage_names(cfg) -> Dict[str, str]:
+def baseline_stage_names(cfg, mesh=None) -> Dict[str, str]:
     """Basic FL / CwMed: the same pipeline with every committee stage a
     no-op — one central aggregation over an unvalidated cohort."""
     return {
         "sampler": "uniform",
-        "local_trainer": "local_sgd",
+        "local_trainer": "local_sgd_sharded" if mesh is not None
+        else "local_sgd",
         "validator": "accept_all",
         "packer": "all",
         "aggregator": "pytree",
@@ -304,6 +319,8 @@ def build_pipeline(
 ) -> RoundPipeline:
     """Stage names (+ optional per-kind overrides: a registered name or a
     bare callable) -> RoundPipeline."""
+    import repro.fl.sharded  # noqa: F401  (registers the sharded stage set)
+
     merged = dict(names)
     if overrides:
         unknown = set(overrides) - set(STAGE_KINDS)
@@ -356,10 +373,12 @@ def sample_uniform(ctx: RoundContext) -> None:
     ctx.trainers = rng.choice(n, m, replace=False).tolist()
 
 
-@register("local_trainer", "local_sgd")
-def train_local_sgd(ctx: RoundContext) -> None:
-    """(2) cohort-batched local SGD (one vmapped XLA program) + per-node
-    attack injection for malicious trainers."""
+def sample_cohort_batches(ctx: RoundContext):
+    """The cohort's stacked local batches: (P, steps, b, ...), (P, steps, b).
+
+    One rng draw per trainer in ``ctx.trainers`` order — the single- and
+    multi-device trainers share this so a fixed seed produces the same
+    stream (the differential tests compare chain hashes)."""
     cfg, rng = ctx.cfg, ctx.rng
     pairs = [
         sample_client_batches(
@@ -368,16 +387,28 @@ def train_local_sgd(ctx: RoundContext) -> None:
         )
         for i in ctx.trainers
     ]
-    xs = np.stack([p[0] for p in pairs])
-    ys = np.stack([p[1] for p in pairs])
-    stacked = ctx.local_train_fn(ctx.params, xs, ys)
-    updates = _unstack(stacked, len(ctx.trainers))
+    return np.stack([p[0] for p in pairs]), np.stack([p[1] for p in pairs])
+
+
+def poison_cohort_updates(ctx: RoundContext, updates: List[Any]) -> None:
+    """Per-node attack injection for malicious trainers (in place)."""
+    cfg, rng = ctx.cfg, ctx.rng
     attack = ATTACKS[cfg.attack]
     for idx, node_id in enumerate(ctx.trainers):
         if ctx.is_malicious(node_id):
             updates[idx] = attack(
                 rng, updates[idx], cfg.attack_sigma, ref=ctx.params
             ) if cfg.attack == "gaussian" else attack(rng, updates[idx])
+
+
+@register("local_trainer", "local_sgd")
+def train_local_sgd(ctx: RoundContext) -> None:
+    """(2) cohort-batched local SGD (one vmapped XLA program) + per-node
+    attack injection for malicious trainers."""
+    xs, ys = sample_cohort_batches(ctx)
+    stacked = ctx.local_train_fn(ctx.params, xs, ys)
+    updates = _unstack(stacked, len(ctx.trainers))
+    poison_cohort_updates(ctx, updates)
     ctx.cohort_updates = updates
 
 

@@ -104,6 +104,7 @@ class BFLCRuntime:
         cfg: BFLCConfig,
         initial_params=None,
         stages: Optional[Dict[str, object]] = None,
+        mesh=None,
     ):
         if cfg.quantize_chain and not cfg.use_kernels:
             # the quantized chain path IS the fused Pallas engine; there is
@@ -160,6 +161,28 @@ class BFLCRuntime:
         self._eval = make_eval_fn(adapter)
         self._collusion = CollusionPolicy()
 
+        # sharded round engine: one shard_mapped program set per mesh,
+        # consumed by the local_sgd_sharded / *_sharded stages via ctx
+        self.mesh = mesh
+        self._sharded_train = None
+        self._sharded_quantize = None
+        self._sharded_agg = None
+        if mesh is not None:
+            from repro.fl.client import make_sharded_local_train_fn
+            from repro.kernels.ops import (
+                make_aggregate_quantized_sharded,
+                make_quantize_stack_sharded,
+            )
+
+            self._sharded_train = make_sharded_local_train_fn(
+                adapter, cfg.local_lr, mesh, momentum=cfg.momentum
+            )
+            if cfg.quantize_chain:
+                self._sharded_quantize = make_quantize_stack_sharded(mesh)
+                self._sharded_agg = make_aggregate_quantized_sharded(
+                    mesh, method=cfg.aggregation, trim=cfg.trim
+                )
+
         # fixed per-round sizes: keeps XLA programs shape-stable (one compile).
         # Committee size >= 3: the median of two scores is their mean, so a
         # single colluding member controls it (observed takeover cascade in a
@@ -184,7 +207,7 @@ class BFLCRuntime:
                             replace=False).tolist()
         )
         self._fill_committee()
-        self.pipeline = build_pipeline(default_stage_names(cfg), stages)
+        self.pipeline = build_pipeline(default_stage_names(cfg, mesh), stages)
         self.logs: List[RoundLog] = []
         self.stage_timings: List[Dict[str, float]] = []
 
@@ -222,6 +245,10 @@ class BFLCRuntime:
             local_train_fn=self._local_train,
             score_matrix_fn=self._score_matrix,
             collusion=self._collusion,
+            mesh=self.mesh,
+            sharded_train_fn=self._sharded_train,
+            sharded_quantize_fn=self._sharded_quantize,
+            sharded_agg_fn=self._sharded_agg,
         )
         self.pipeline.run(ctx)
         self.committee = ctx.committee

@@ -1,0 +1,139 @@
+"""The sharded round engine: multi-device BFLC stages (ROADMAP follow-ups).
+
+Three registered stages turn one round into a data-parallel program over a
+1-D ``("data",)`` mesh (``repro.launch.mesh.make_round_mesh``), with zero
+edits to the round loop:
+
+* ``local_trainer = "local_sgd_sharded"`` — the P-client vmapped local-SGD
+  program (``repro.fl.client``) shard_mapped over the mesh's data axis: P
+  clients split across devices, each device scanning its client shard, the
+  stacked update pytree all-gathered when the host unstacks it.  Batch
+  sampling and attack injection are byte-identical to ``local_sgd`` (shared
+  helpers), so a fixed seed yields the same rng stream — and the per-client
+  math is the same XLA program, so f32 chain hashes match the single-device
+  engine bit-for-bit.
+* ``packer = "top_k_int8_sharded"`` — sharding-aware ``Packer``: the int8
+  stack is built per-shard (each device quantizes its D-slice; tiles are
+  BLOCK_D-aligned by construction so per-tile scales coincide with the
+  single-device codec), blobs land on the chain in the same
+  ``{"q", "scales", "d"}`` schema.
+* ``aggregator = "fused_int8_sharded"`` — each device runs the fused
+  int8->dequant->reduce kernel (PR 1) on its D-shard of the stack, then the
+  model block is all-gathered (XLA inserts it at the first replicated use).
+
+The stages read their pre-built programs from ``RoundContext``
+(``sharded_train_fn`` / ``sharded_quantize_fn`` / ``sharded_agg_fn``, built
+once per runtime by ``BFLCRuntime(..., mesh=...)`` — see
+``repro.api.build_runtime``).  Everything runs on CPU under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``, which is how the
+differential test harness (tests/test_sharded_round.py) exercises 1/2/8
+devices without a TPU.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core.aggregation import flatten_updates, normalize_weights
+from repro.fl.pipeline import (
+    RoundContext,
+    _select_top_k,
+    _set_packed,
+    _commit_aggregate,
+    _unstack,
+    poison_cohort_updates,
+    register,
+    sample_cohort_batches,
+)
+
+
+def _require(ctx: RoundContext, field: str, stage: str):
+    fn = getattr(ctx, field)
+    if fn is None:
+        raise RuntimeError(
+            f"{stage} needs ctx.{field} — build the runtime with a mesh "
+            "(build_runtime(..., mesh=make_round_mesh(n)))"
+        )
+    return fn
+
+
+def _pad_clients(xs: np.ndarray, ys: np.ndarray, ndev: int):
+    """Pad the leading client axis to a multiple of the mesh's data-axis
+    size by repeating the last client's batches (per-client programs are
+    independent, so padded rows never contaminate real clients)."""
+    P = xs.shape[0]
+    pad = (-P) % ndev
+    if pad == 0:
+        return xs, ys, P
+    xs = np.concatenate([xs, np.repeat(xs[-1:], pad, axis=0)])
+    ys = np.concatenate([ys, np.repeat(ys[-1:], pad, axis=0)])
+    return xs, ys, P
+
+
+@register("local_trainer", "local_sgd_sharded")
+def train_local_sgd_sharded(ctx: RoundContext) -> None:
+    """(2, sharded) cohort-batched local SGD, clients split over the mesh's
+    data axis; one shard_mapped XLA program per cohort shape."""
+    train_fn = _require(ctx, "sharded_train_fn", "local_sgd_sharded")
+    mesh = _require(ctx, "mesh", "local_sgd_sharded")
+    ndev = dict(mesh.shape).get("data", mesh.devices.size)
+    xs, ys = sample_cohort_batches(ctx)
+    xs, ys, n = _pad_clients(xs, ys, ndev)
+    stacked = train_fn(ctx.params, xs, ys)
+    # materialize the all-gather here, once: the downstream stages (P x Q
+    # committee scoring, packing) are single-device programs, and feeding
+    # them a device-committed P-sharded stack makes GSPMD replicate their
+    # compute per shard (observed: validate wall-clock doubling with every
+    # device-count doubling before this gather)
+    stacked = jax.device_get(stacked)
+    updates = _unstack(stacked, n)          # padded rows never unstacked
+    poison_cohort_updates(ctx, updates)
+    ctx.cohort_updates = updates
+
+
+@register("packer", "top_k_int8_sharded")
+def pack_top_k_int8_sharded(ctx: RoundContext) -> None:
+    """Sharding-aware quantized packing: flatten the packed cohort once,
+    quantize each device's D-shard of the (K, D) stack in parallel, store
+    int8 blobs as update blocks, hand the (sharded) int8 stack to the
+    sharded aggregator."""
+    quantize_fn = _require(ctx, "sharded_quantize_fn", "top_k_int8_sharded")
+    _set_packed(ctx, _select_top_k(ctx))
+    stack, unravel = flatten_updates(ctx.packed_updates)
+    d = stack.shape[1]
+    q, s = quantize_fn(stack)
+    # one gather for the whole stack: slicing rows of the D-sharded arrays
+    # inside the loop would pay a cross-device gather + host transfer per
+    # blob (the digest reads the bytes anyway); the aggregator still gets
+    # the sharded (q, s) below
+    qh, sh = jax.device_get((q, s))
+    for i, (u, sc) in enumerate(zip(ctx.packed_ids, ctx.packed_scores)):
+        ctx.chain.append_update(
+            {"q": qh[i], "scales": sh[i], "d": d}, u, sc, encoded=True
+        )
+        ctx.manager.nodes[u].score_history.append(sc)
+    ctx.packed_quantized = (q, s, d, unravel)
+
+
+@register("aggregator", "fused_int8_sharded")
+def aggregate_fused_int8_sharded(ctx: RoundContext) -> None:
+    """(4, sharded) fused one-pass aggregation of each device's D-shard of
+    the chain's int8 representation; the reduced model block is
+    all-gathered into the replicated params."""
+    agg_fn = _require(ctx, "sharded_agg_fn", "fused_int8_sharded")
+    if ctx.packed_quantized is None:
+        raise RuntimeError(
+            "fused_int8_sharded aggregator needs a quantizing packer (e.g. "
+            "'top_k_int8_sharded') to stage the int8 stack in "
+            "ctx.packed_quantized"
+        )
+    q, s, d, unravel = ctx.packed_quantized
+    w = normalize_weights(q.shape[0], None if ctx.weights is None
+                          else jax.numpy.asarray(ctx.weights))
+    # materialize the all-gather once: the reduced vector becomes the next
+    # model block, and every next-round stage (local training dispatch,
+    # P x Q scoring) is keyed on replicated params — leaving them
+    # D-sharded re-shards each of those programs instead (same pathology
+    # as the trainer's gather above)
+    flat = np.asarray(agg_fn(q, s, w)[:d])
+    _commit_aggregate(ctx, unravel(flat))

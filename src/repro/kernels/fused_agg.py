@@ -69,10 +69,19 @@ def _fused_kernel_qout(w_ref, s_ref, x_ref, q_ref, so_ref, *,
     so_ref[0, 0] = scale
 
 
-@functools.partial(
-    jax.jit, static_argnames=("method", "trim", "quantize_out", "interpret")
-)
-def fused_agg_kernel(
+def make_fused_agg_fn(*, method: str = "fedavg", trim: int = 1,
+                      quantize_out: bool = False, interpret: bool = True):
+    """Unjitted ``(qstack, scales, weights) -> out`` closure over the static
+    kernel knobs — the form the sharded aggregation path composes under
+    ``shard_map`` (each device invokes it on its D-shard of the stack;
+    ``fused_agg_kernel`` below is the same closure jitted for direct use)."""
+    return functools.partial(
+        _fused_agg, method=method, trim=trim,
+        quantize_out=quantize_out, interpret=interpret,
+    )
+
+
+def _fused_agg(
     qstack: jnp.ndarray,
     scales: jnp.ndarray,
     weights: jnp.ndarray,
@@ -82,11 +91,6 @@ def fused_agg_kernel(
     quantize_out: bool = False,
     interpret: bool = True,
 ):
-    """qstack: (K, D) int8; scales: (K, D // BLOCK_D) f32; weights: (K,)
-    normalized (ignored unless method == "fedavg").
-
-    Returns (D,) f32, or (q (D,) int8, out_scales (D // BLOCK_D,) f32) when
-    ``quantize_out`` — everything in a single grid pass over the stack."""
     K, D = qstack.shape
     assert D % BLOCK_D == 0, D
     assert qstack.dtype == jnp.int8, qstack.dtype
@@ -128,3 +132,25 @@ def fused_agg_kernel(
         interpret=interpret,
     )(*operands)
     return q[0], s[0]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("method", "trim", "quantize_out", "interpret")
+)
+def fused_agg_kernel(
+    qstack: jnp.ndarray,
+    scales: jnp.ndarray,
+    weights: jnp.ndarray,
+    *,
+    method: str = "fedavg",
+    trim: int = 1,
+    quantize_out: bool = False,
+    interpret: bool = True,
+):
+    """qstack: (K, D) int8; scales: (K, D // BLOCK_D) f32; weights: (K,)
+    normalized (ignored unless method == "fedavg").
+
+    Returns (D,) f32, or (q (D,) int8, out_scales (D // BLOCK_D,) f32) when
+    ``quantize_out`` — everything in a single grid pass over the stack."""
+    return _fused_agg(qstack, scales, weights, method=method, trim=trim,
+                      quantize_out=quantize_out, interpret=interpret)

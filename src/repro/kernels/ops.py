@@ -9,6 +9,12 @@ and pytree-level helpers adapt model updates.
   aggregate(stack, method=..., weights=..., trim=...)        f32 path
   aggregate_quantized(q, scales, method=..., ...)            fused int8 path
   quantize_stack(stack)                                      round codec
+
+The sharded multi-device engine builds its programs once through the
+factories at the bottom (``make_quantize_stack_sharded`` /
+``make_aggregate_quantized_sharded``): each device runs the same Pallas
+kernels on its D-shard of the int8 stack — tile-aligned by construction,
+so per-shard results are bitwise identical to the single-device tiles.
 """
 from __future__ import annotations
 
@@ -111,12 +117,16 @@ def trimmed_mean(stack: jnp.ndarray, trim: int = 1) -> jnp.ndarray:
 def quantize(x: jnp.ndarray):
     """(D,) -> (q int8 (D,), scales, D) — chain-storage codec."""
     D = x.shape[0]
+    if D == 0:  # zero-size pytrees: nothing to tile, nothing to store
+        return jnp.zeros((0,), jnp.int8), jnp.zeros((0,), jnp.float32), 0
     padded, _ = _pad_to_block(x)
     q, s = quantize_kernel(padded, interpret=_interpret())
     return q, s, D
 
 
 def dequantize(q: jnp.ndarray, scales: jnp.ndarray, D: int) -> jnp.ndarray:
+    if D == 0:
+        return jnp.zeros((0,), jnp.float32)
     out = dequantize_kernel(q, scales, interpret=_interpret())
     return out[:D]
 
@@ -127,7 +137,9 @@ def quantize_stack(stack: jnp.ndarray):
     One kernel launch quantizes a whole round's K update vectors; zero-pads
     to the tile boundary (padded lanes quantize to 0 and are never read back
     past D)."""
-    D = stack.shape[1]
+    K, D = stack.shape
+    if D == 0:
+        return jnp.zeros((K, 0), jnp.int8), jnp.zeros((K, 0), jnp.float32), 0
     padded, _ = _pad_to_block(stack)
     q, s = quantize_stack_kernel(padded, interpret=_interpret())
     return q, s, D
@@ -159,6 +171,81 @@ def aggregate_quantized(
         q_out, s_out = out
         return q_out, s_out, true_d
     return out[:true_d]
+
+
+# ----------------------------------------------------------------------
+# sharded multi-device engine (one program per mesh, built once)
+# ----------------------------------------------------------------------
+def padded_dim_sharded(d: int, shards: int) -> int:
+    """Smallest multiple of ``shards * BLOCK_D`` >= d.
+
+    Padding to this boundary keeps every D-shard tile-aligned, so the
+    per-shard quantization tiles (and their scales) coincide exactly with
+    the single-device tiles — the sharded codec differs from the
+    single-device codec only in how many all-zero padding tiles trail the
+    data."""
+    chunk = BLOCK_D * shards
+    return d + (-d) % chunk
+
+
+def make_quantize_stack_sharded(mesh, axis: str = "data"):
+    """Sharding-aware round codec: jitted ``(K, D) f32 -> (q, scales)``.
+
+    Pads D to ``padded_dim_sharded(D, ndev)`` and shard_maps
+    ``quantize_stack_kernel`` over the mesh's data axis — each device
+    quantizes its own (K, Dpad/ndev) slice of the stack, one kernel launch
+    per device, no cross-device traffic (tiles are independent)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.shard_compat import shard_map
+
+    ndev = mesh.shape[axis]
+    interpret = _interpret()
+
+    def _shard(chunk):                         # (K, Dpad / ndev) per device
+        return quantize_stack_kernel(chunk, interpret=interpret)
+
+    sharded = shard_map(_shard, mesh=mesh, in_specs=P(None, axis),
+                        out_specs=(P(None, axis), P(None, axis)))
+
+    @jax.jit
+    def quantize_sharded(stack: jnp.ndarray):
+        D = stack.shape[1]
+        pad = padded_dim_sharded(D, ndev) - D
+        if pad:
+            stack = jnp.pad(stack, ((0, 0), (0, pad)))
+        return sharded(stack)
+
+    return quantize_sharded
+
+
+def make_aggregate_quantized_sharded(mesh, axis: str = "data",
+                                     method: str = "fedavg", trim: int = 1):
+    """Sharded fused aggregation: jitted ``(q, scales, weights) -> (Dpad,)``.
+
+    Each device runs the fused int8->dequant->reduce kernel on its D-shard
+    of the stack (the ROADMAP follow-up); the (Dpad,)-sharded result is
+    all-gathered into the replicated model block by XLA at the first
+    replicated use (``apply_update``).  ``weights`` must already be
+    normalized (``normalize_weights``) and is replicated to every shard so
+    the fedavg reduction weighs rows identically everywhere."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.kernels.fused_agg import make_fused_agg_fn
+    from repro.shard_compat import shard_map
+
+    fused = make_fused_agg_fn(method=method, trim=trim,
+                              interpret=_interpret())
+    sharded = shard_map(fused, mesh=mesh,
+                        in_specs=(P(None, axis), P(None, axis), P()),
+                        out_specs=P(axis))
+
+    @jax.jit
+    def aggregate_sharded(q: jnp.ndarray, scales: jnp.ndarray,
+                          weights: jnp.ndarray):
+        return sharded(q, scales, weights.astype(jnp.float32))
+
+    return aggregate_sharded
 
 
 # ----------------------------------------------------------------------

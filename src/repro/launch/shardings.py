@@ -233,3 +233,30 @@ def named(mesh, spec_tree):
         lambda s: NamedSharding(mesh, s), spec_tree,
         is_leaf=lambda x: isinstance(x, P),
     )
+
+
+# ----------------------------------------------------------------------------
+# round-engine specs (the BFLC sharded stages, repro.fl.sharded)
+# ----------------------------------------------------------------------------
+
+
+def round_engine_pspecs(axis: str = "data") -> dict:
+    """The sharded round engine's data layout, in one place:
+
+    * ``clients``    — client-stacked leaves (P, ...): P over the data axis
+      (local-training batches in, update stacks out);
+    * ``dshard``     — (K, Dpad) int8 stack and (K, nblk) scales: D over the
+      data axis (each device quantizes/reduces its slice);
+    * ``dvec``       — (Dpad,) aggregated flat update: D over the data axis
+      (all-gathered into the model block at first replicated use);
+    * ``replicated`` — global params and the (K,) weight vector.
+
+    The shard_mapped programs (repro.fl.client / repro.kernels.ops) encode
+    exactly these specs; the differential test harness asserts the arrays
+    they produce actually carry them."""
+    return {
+        "clients": P(axis),
+        "dshard": P(None, axis),
+        "dvec": P(axis),
+        "replicated": P(),
+    }

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.shard_compat import shard_map
 from repro.models.config import ModelConfig
 from repro.models.layers import act_fn, dense_init, is_gated
 
@@ -266,12 +267,11 @@ def moe_expert_parallel(
             aux = jax.lax.pmean(aux, axes)
         return y.reshape(B_loc, S_loc, D).astype(xl.dtype), aux
 
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         body,
         mesh=mesh,
         in_specs=(pspec, x_spec),
         out_specs=(x_spec, P()),
-        check_vma=False,
     )(params, x)
     return out, aux
 

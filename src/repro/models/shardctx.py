@@ -67,17 +67,22 @@ def make_shard_ctx(mesh, dp_axes, model_axis: str, *, batch_sharded: bool,
                    seq_parallel: bool = False,
                    act_shard_d: bool = False) -> ShardCtx:
     dp = dp_axes if batch_sharded else None
-    msize = mesh.shape[model_axis]
-    kv_heads_shardable = num_kv_heads > 0 and num_kv_heads % msize == 0
-    q_heads_shardable = num_heads > 0 and num_heads % msize == 0
+    # data-only meshes (the BFLC round engine's make_round_mesh) have no
+    # model axis: treat it as size 1 and never name it in a spec
+    msize = dict(mesh.shape).get(model_axis, 1)
+    M = model_axis if model_axis in mesh.axis_names else None
+    kv_heads_shardable = (M is not None and num_kv_heads > 0
+                          and num_kv_heads % msize == 0)
+    q_heads_shardable = (M is not None and num_heads > 0
+                         and num_heads % msize == 0)
     return ShardCtx(
         mesh=mesh,
         moe=moe,
-        act_spec=P(dp, model_axis if seq_parallel else None,
-                   model_axis if act_shard_d and not seq_parallel else None),
-        logits_spec=P(dp, None, model_axis),
-        kv_spec=P(dp, None, model_axis if kv_heads_shardable else None, None),
-        q_spec=(P(dp, None, model_axis, None) if q_heads_shardable else None),
+        act_spec=P(dp, M if seq_parallel else None,
+                   M if act_shard_d and not seq_parallel else None),
+        logits_spec=P(dp, None, M),
+        kv_spec=P(dp, None, M if kv_heads_shardable else None, None),
+        q_spec=(P(dp, None, M, None) if q_heads_shardable else None),
         dp=dp,
         model_axis=model_axis,
         model_size=msize,

@@ -1,0 +1,151 @@
+"""Property-based tests (hypothesis) for the chain's int8 update codec.
+
+Covers ``Int8UpdateCodec`` (pytree <-> int8 blob) and the ``Chain``
+update-block codec integration:
+
+* encode -> decode roundtrip error is bounded by the per-tile quantization
+  step (scale = max|x| / 127 per BLOCK_D tile, so |x - deq(q)| <= scale/2
+  per element, up to f32 rounding);
+* the block hash covers the ``encoded`` flag — an unauthenticated flip of
+  the codec flag breaks verification;
+* arbitrary pytree shapes/dtypes, including zero-length leaves and sizes
+  that are not BLOCK_D-aligned.
+
+Imports the ``_hypothesis_compat`` shim: with hypothesis absent the
+property tests skip individually while the module still collects.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.core.blockchain import Chain
+from repro.kernels.ops import Int8UpdateCodec, dequantize, quantize
+from repro.kernels.tiling import BLOCK_D
+
+# leaf sizes deliberately straddle the tile boundary: empty, tiny,
+# BLOCK_D-1 / BLOCK_D / BLOCK_D+1, and a multi-tile size
+_SIZES = st.sampled_from([0, 1, 7, BLOCK_D - 1, BLOCK_D, BLOCK_D + 1, 5000])
+_DTYPES = st.sampled_from([np.float32, np.float64, np.float16])
+
+
+def _leaf(rng: np.random.Generator, size: int, dtype, scale: float):
+    x = (rng.standard_normal(size) * scale).astype(dtype)
+    # reshape some leaves to matrices: codecs must be shape-agnostic
+    if size % 2 == 0 and size > 0:
+        x = x.reshape(2, size // 2)
+    return x
+
+
+@st.composite
+def _pytrees(draw):
+    rng = np.random.default_rng(draw(st.integers(0, 2**31 - 1)))
+    n_leaves = draw(st.integers(1, 4))
+    scale = draw(st.floats(1e-4, 1e3))
+    leaves = {
+        f"leaf{i}": _leaf(rng, draw(_SIZES), draw(_DTYPES), scale)
+        for i in range(n_leaves)
+    }
+    return leaves
+
+
+@given(tree=_pytrees())
+@settings(max_examples=20, deadline=None)
+def test_codec_roundtrip_error_bound(tree):
+    codec = Int8UpdateCodec(tree)
+    blob = codec.encode(tree)
+    out = codec.decode(blob)
+    for key, leaf in tree.items():
+        dec = np.asarray(out[key], np.float64).reshape(-1)
+        src = np.asarray(leaf, np.float64).reshape(-1)
+        assert dec.shape == src.shape
+        if src.size == 0:
+            continue
+        # per-tile bound: scale = amax_tile / 127 <= amax / 127, so the
+        # quantization error is <= scale / 2 per element; the dtype term
+        # absorbs the cast back to the leaf's dtype (f16: eps ~ 2^-11)
+        amax = float(np.max(np.abs(src)))
+        dtype_eps = 1e-3 if leaf.dtype == np.float16 else 1e-6
+        bound = amax * (0.5 / 127.0 + dtype_eps) + 1e-7
+        assert float(np.max(np.abs(dec - src))) <= bound
+
+
+@given(tree=_pytrees())
+@settings(max_examples=10, deadline=None)
+def test_codec_blob_schema_and_chain_storage(tree):
+    codec = Int8UpdateCodec(tree)
+    blob = codec.encode(tree)
+    assert set(blob) == {"q", "scales", "d"}
+    q = np.asarray(blob["q"])
+    assert q.dtype == np.int8
+    assert q.shape[0] % BLOCK_D == 0 or q.shape[0] == 0
+    assert int(blob["d"]) == codec.dim
+    # a chain with this codec stores / decodes the blob transparently
+    chain = Chain(1, update_codec=codec)
+    chain.append_model({"w": np.zeros(3, np.float32)}, 0)
+    chain.append_update(tree, uploader=7, score=0.5)
+    assert chain.blocks[-1].encoded
+    assert chain.verify()
+    decoded = chain.update_payloads_at_round(0)[0]
+    for key, leaf in tree.items():
+        assert np.asarray(decoded[key]).shape == np.asarray(leaf).shape
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_block_hash_covers_encoded_flag(seed):
+    rng = np.random.default_rng(seed)
+    tree = {"w": rng.standard_normal(257).astype(np.float32)}
+    codec = Int8UpdateCodec(tree)
+    chain = Chain(1, update_codec=codec)
+    chain.append_model({"w": np.zeros(3, np.float32)}, 0)
+    blk = chain.append_update(tree, uploader=1, score=0.9)
+    assert chain.verify()
+    # flipping the codec flag without re-hashing must break the chain:
+    # the flag decides how the stored blob is interpreted on read
+    blk.encoded = not blk.encoded
+    assert blk.compute_hash() != blk.hash
+    assert not chain.verify()
+    blk.encoded = not blk.encoded
+    assert chain.verify()
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_hypothesis_is_exercised():
+    """Meta-check so CI with hypothesis installed can't silently skip the
+    property suite (locally, without hypothesis, this skips too)."""
+    assert HAVE_HYPOTHESIS
+
+
+def test_quantize_zero_length_vector():
+    """Deterministic pin of the degenerate case (also hit by the
+    hypothesis strategies): a zero-size flat vector roundtrips to a
+    zero-size vector without launching a kernel."""
+    q, s, d = quantize(jnp.zeros((0,), jnp.float32))
+    assert q.shape == (0,) and s.shape == (0,) and d == 0
+    out = dequantize(q, s, d)
+    assert out.shape == (0,)
+
+
+def test_codec_non_aligned_roundtrip_deterministic():
+    """Deterministic (no-hypothesis) fallback for the roundtrip bound on a
+    non-BLOCK_D-aligned, mixed-dtype tree — always runs, even where the
+    property suite skips."""
+    rng = np.random.default_rng(0)
+    tree = {
+        "a": rng.standard_normal(BLOCK_D + 3).astype(np.float32),
+        "b": rng.standard_normal((2, 5)).astype(np.float16),
+        "c": np.zeros((0,), np.float32),
+    }
+    codec = Int8UpdateCodec(tree)
+    out = codec.decode(codec.encode(tree))
+    for key, leaf in tree.items():
+        src = np.asarray(leaf, np.float64)
+        dec = np.asarray(out[key], np.float64)
+        assert dec.shape == src.shape
+        if src.size:
+            amax = float(np.max(np.abs(src)))
+            eps = 1e-3 if leaf.dtype == np.float16 else 1e-6
+            assert (float(np.max(np.abs(dec - src)))
+                    <= amax * (0.5 / 127.0 + eps) + 1e-7)

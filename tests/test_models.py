@@ -146,10 +146,15 @@ def test_encoder_masked_prediction():
     logits, _ = forward(params, cfg, b)
     assert logits.shape == (2, 32, 54)
     assert not jnp.isnan(logits).any()
-    # bidirectional: future context must influence masked positions
-    b2 = b._replace(embeds=b.embeds.at[:, -1].add(10.0))
+    # bidirectional: future context must influence earlier positions.
+    # Perturb row 0's LAST unmasked frame — masked frames are replaced by
+    # mask_emb in embed_inputs, so perturbing one of those (e.g. blindly
+    # using frame -1) never reaches the model at all.
+    col = int(jnp.where(~b.embed_mask[0], jnp.arange(32), -1).max())
+    assert col > 0, "fixed-seed batch left row 0 fully masked"
+    b2 = b._replace(embeds=b.embeds.at[0, col].add(10.0))
     logits2, _ = forward(params, cfg, b2)
-    assert float(jnp.abs(logits2[:, 0] - logits[:, 0]).max()) > 1e-5
+    assert float(jnp.abs(logits2[0, 0] - logits[0, 0]).max()) > 1e-5
 
 
 def test_moe_dense_topk_selectivity():

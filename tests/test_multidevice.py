@@ -26,11 +26,11 @@ def run_with_devices(code: str, n: int = 8) -> str:
 def test_moe_expert_parallel_equals_dense():
     run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
+        from repro.launch.mesh import make_host_mesh
         from repro.models.config import ModelConfig, moe_unit
         from repro.models.moe import (MoEShardingCtx, init_moe, moe_dense,
                                       moe_expert_parallel)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_host_mesh(2, 4)
         cfg = ModelConfig(name="t", arch_type="moe", d_model=32, vocab_size=97,
                           unit=moe_unit(1), num_units=1, num_heads=4,
                           num_kv_heads=4, d_ff=64, num_experts=8,

@@ -35,6 +35,10 @@ from repro.fl.client import sample_client_batches
 from repro.fl.pipeline import _stack, _unstack
 from repro.fl.runtime import RoundLog
 
+# full legacy-vs-pipeline round replays: one of the long parity suites
+# (deselect with -m "not slow"; CI's fast lane does)
+pytestmark = pytest.mark.slow
+
 
 class LegacyBFLCRuntime(BFLCRuntime):
     """The pre-refactor ~180-line monolithic round, verbatim."""

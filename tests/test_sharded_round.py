@@ -1,0 +1,194 @@
+"""Differential test harness for the sharded round engine.
+
+Every test runs the SAME community/seed through the single-device stages
+and the sharded stages (1, 2 and 8 forced CPU devices — conftest forces
+``--xla_force_host_platform_device_count=8``) and compares:
+
+* f32 path (``local_sgd_sharded`` + dense aggregation): update pytrees
+  allclose AND chain fingerprints (block hashes, packed uploader ids) and
+  ``RoundLog``s **identical** — per-client local SGD is the same XLA
+  program on every device, so sharding may not change a single bit;
+* int8 path (``top_k_int8_sharded`` + ``fused_int8_sharded``): the sharded
+  codec pads D to the shard boundary, so chain blobs differ in length and
+  hashes legitimately diverge — the aggregated model params must stay
+  within tolerance (they are tile-aligned, so in practice bitwise equal)
+  and the ``RoundLog``s identical;
+* the padding path: P (trainers per cohort) NOT divisible by the device
+  count.
+
+This is the harness the attack-scenario and kernel tests ride on: a
+regression anywhere in the sharded engine shows up as a hash or log
+mismatch against the single-device oracle.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.api import build_runtime
+from repro.core.blockchain import UPDATE
+from repro.data import make_femnist_like
+from repro.fl import femnist_adapter
+from repro.fl.client import (
+    make_local_train_fn,
+    make_sharded_local_train_fn,
+)
+from repro.launch.shardings import round_engine_pspecs
+
+DEVICE_COUNTS = (1, 2, 8)
+
+CFG = dict(active_proportion=0.5, committee_fraction=0.3, k_updates=4,
+           local_steps=3, local_batch=8, malicious_fraction=0.25,
+           attack_sigma=1.5, seed=0)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_femnist_like(num_clients=24, mean_samples=40,
+                             test_size=200, seed=3)
+
+
+@pytest.fixture(scope="module")
+def adapter():
+    return femnist_adapter(width=8)
+
+
+def _chain_fingerprint(chain):
+    return (
+        chain.height,
+        [b.hash for b in chain.blocks],
+        [b.uploader for b in chain.blocks if b.kind == UPDATE],
+        [b.score for b in chain.blocks if b.kind == UPDATE],
+    )
+
+
+def _leaves_allclose(a, b, atol=0.0):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=atol)
+
+
+# ----------------------------------------------------------------------
+# trainer-level differential: shard_map vs vmap, including padding
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("ndev", DEVICE_COUNTS)
+@pytest.mark.parametrize("P", (8, 5))   # 5: P % ndev != 0 -> padding path
+def test_sharded_trainer_matches_vmapped(round_mesh, adapter, ndev, P):
+    mesh = round_mesh(ndev)
+    params = adapter.init(jax.random.PRNGKey(0))
+    single = make_local_train_fn(adapter, 0.05, 0.9)
+    sharded = make_sharded_local_train_fn(adapter, 0.05, mesh, momentum=0.9)
+    rng = np.random.default_rng(7)
+    xs = rng.normal(size=(P, 3, 8, 28, 28, 1)).astype(np.float32)
+    ys = rng.integers(0, 62, (P, 3, 8))
+    pad = (-P) % ndev
+    xs_p = np.concatenate([xs, np.repeat(xs[-1:], pad, axis=0)])
+    ys_p = np.concatenate([ys, np.repeat(ys[-1:], pad, axis=0)])
+    u_sh = jax.tree.map(lambda x: x[:P], sharded(params, xs_p, ys_p))
+    u_1 = single(params, xs, ys)
+    # same per-client XLA program -> bitwise equality, not just allclose
+    _leaves_allclose(u_sh, u_1, atol=0.0)
+
+
+# ----------------------------------------------------------------------
+# full-round differential: f32 engine (hash-identical)
+# ----------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.parametrize("ndev", DEVICE_COUNTS)
+def test_f32_round_parity(round_mesh, ds, adapter, ndev):
+    mesh = round_mesh(ndev)
+    rt1 = build_runtime(adapter, ds, dict(CFG))
+    rtn = build_runtime(adapter, ds, dict(CFG), mesh=mesh)
+    logs1 = rt1.run(2, eval_every=2)
+    logsn = rtn.run(2, eval_every=2)
+    assert _chain_fingerprint(rt1.chain) == _chain_fingerprint(rtn.chain)
+    assert logs1 == logsn
+    assert rt1.committee == rtn.committee
+    assert rt1.chain.verify() and rtn.chain.verify()
+    _leaves_allclose(rt1.global_params(), rtn.global_params())
+
+
+# ----------------------------------------------------------------------
+# full-round differential: fused-int8 engine (tolerance-bounded)
+# ----------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.parametrize("ndev", DEVICE_COUNTS)
+def test_int8_round_parity(round_mesh, ds, adapter, ndev):
+    mesh = round_mesh(ndev)
+    q_cfg = dict(CFG, quantize_chain=True, use_kernels=True)
+    rt1 = build_runtime(adapter, ds, dict(q_cfg))
+    rtn = build_runtime(adapter, ds, dict(q_cfg), mesh=mesh)
+    logs1 = rt1.run(2, eval_every=2)
+    logsn = rtn.run(2, eval_every=2)
+    # blobs carry shard padding -> hashes may differ; behaviour may not
+    assert logs1 == logsn
+    assert rt1.committee == rtn.committee
+    assert rt1.chain.verify() and rtn.chain.verify()
+    # D-shards are tile-aligned: per-tile scales coincide with the
+    # single-device codec, so the aggregate is equal to f32 rounding
+    _leaves_allclose(rt1.global_params(), rtn.global_params(), atol=1e-6)
+    # both chains store decodable int8 blobs with identical real content
+    b1 = rt1.chain.update_payloads_at_round(0)
+    bn = rtn.chain.update_payloads_at_round(0)
+    for u1, un in zip(b1, bn):
+        _leaves_allclose(u1, un, atol=1e-6)
+    assert all(b.encoded for b in rtn.chain.updates_at_round(0))
+
+
+@pytest.mark.parametrize("ndev", (2, 8))
+def test_baseline_sharded_parity(round_mesh, ds, adapter, ndev):
+    """FLTrainer (Basic FL / CwMed) with a mesh: the committee-free
+    pipeline rides the same sharded trainer and must reproduce the
+    single-device baseline bit-for-bit."""
+    mesh = round_mesh(ndev)
+    kw = dict(active_proportion=0.4, local_steps=3, local_batch=8,
+              aggregation="cwmed", malicious_fraction=0.25, seed=0)
+    bl1 = build_runtime(adapter, ds, dict(kw), baseline=True)
+    bln = build_runtime(adapter, ds, dict(kw), baseline=True, mesh=mesh)
+    bl1.run(2, eval_every=2)
+    bln.run(2, eval_every=2)
+    assert bl1.accuracies == bln.accuracies
+    _leaves_allclose(bl1.params, bln.params)
+
+
+def test_sharded_engine_shardings_and_stages(round_mesh, ds, adapter):
+    """The sharded stages are what actually ran, and the arrays they
+    produce carry the round-engine PartitionSpecs."""
+    mesh = round_mesh(2)
+    specs = round_engine_pspecs()
+    rt = build_runtime(adapter, ds,
+                       dict(CFG, quantize_chain=True, use_kernels=True),
+                       mesh=mesh)
+    from repro.fl import sharded as sharded_mod
+
+    assert rt.pipeline.local_trainer is sharded_mod.train_local_sgd_sharded
+    assert rt.pipeline.packer is sharded_mod.pack_top_k_int8_sharded
+    assert rt.pipeline.aggregator is sharded_mod.aggregate_fused_int8_sharded
+    stack = jax.random.normal(jax.random.PRNGKey(0), (4, 4096))
+    q, s = rt._sharded_quantize(stack)
+    assert q.sharding.spec == specs["dshard"]
+    assert s.sharding.spec == specs["dshard"]
+    out = rt._sharded_agg(q, s, np.full((4,), 0.25, np.float32))
+    assert out.sharding.spec == specs["dvec"]
+
+
+def test_shard_ctx_tolerates_data_only_mesh(round_mesh):
+    """make_shard_ctx on the round engine's 1-D ("data",) mesh: the model
+    axis is absent -> size 1, and no spec may name it."""
+    import jax.numpy as jnp
+
+    from repro.models.shardctx import make_shard_ctx
+
+    mesh = round_mesh(2)
+    ctx = make_shard_ctx(mesh, ("data",), "model", batch_sharded=True,
+                         num_kv_heads=8, num_heads=8)
+    assert ctx.model_size == 1
+    x = jnp.zeros((2, 4, 8))
+    y = ctx.act(x)          # constraint applies on a model-axis-free mesh
+    assert y.shape == x.shape
+    assert ctx.q_spec is None  # heads can't shard without a model axis
+
+
+def test_round_mesh_rejects_oversized_request():
+    from repro.launch.mesh import make_round_mesh
+
+    with pytest.raises(ValueError):
+        make_round_mesh(len(jax.devices()) + 1)
