@@ -96,6 +96,34 @@ def run(full: bool = False):
             emit(f"fused_int8_{method}_K{K}_D{D}", us,
                  f"hbm_bytes={fb}", nbytes=fb)
 
+        # fused candidate rebuild (committee validation, score-from-int8):
+        # staged = dequantize rows to a f32 stack, then add the base params
+        # (two f32 materializations of (K, D)); fused = one int8 read with
+        # the delta applied during the base-parameter load
+        base = stack[0]
+
+        def staged_cand():
+            f32 = jnp.stack([ops.dequantize(q[i], s[i], d) for i in range(K)])
+            return f32 + base[None, :]
+
+        def fused_cand():
+            return ops.candidates_from_quantized(base, q, s, d)
+
+        us_staged = time_us(staged_cand, iters=3)
+        us_fused = time_us(fused_cand, iters=3)
+        sb = (K * dpad + K * nblk * 4      # int8 stack + scales read
+              + 2 * K * dpad * 4           # f32 stack write + read back
+              + dpad * 4                   # base params read
+              + K * dpad * 4)              # candidate stack write
+        fb = (K * dpad + K * nblk * 4      # int8 stack + scales read
+              + dpad * 4                   # base params read
+              + K * dpad * 4)              # candidate stack write (once)
+        emit(f"staged_candidates_K{K}_D{D}", us_staged,
+             f"hbm_bytes={sb}", nbytes=sb)
+        emit(f"fused_candidates_K{K}_D{D}", us_fused,
+             f"hbm_bytes={fb} vs_staged={us_fused / max(us_staged, 1e-9):.2f}x "
+             f"bytes_ratio={fb / sb:.3f}", nbytes=fb)
+
 
 if __name__ == "__main__":
     run(full=True)

@@ -9,11 +9,25 @@ first-shape retraces land there, and ``RoundPipeline._timed`` blocks on
 stage outputs, the same warmup-blocking discipline as ``common.time_us``),
 then the timing window opens on steady-state rounds only.
 
+The ``validate`` and ``aggregate`` rows additionally carry modeled HBM
+traffic (bytes column): the update-stack bytes each engine moves per
+round — every default validator scores f32 (it reads the (P, D) stack
+and writes the (P, D) candidate stack once; the opt-in fused int8-view
+scorers are byte-modeled in kernel_bench's ``fused_candidates`` rows),
+f32 aggregation reads the (K, D) stack, and fused-int8 aggregation
+reads the int8 stack once (PR 1's model).  Interpret-mode wall-clock on
+CPU is launch-dominated, so the byte model is the number that predicts
+TPU behavior.
+
 ``benchmarks.run`` snapshots these rows to ``BENCH_round.json`` so
-round-loop perf — including sharded train/aggregate scaling with device
-count — is tracked across PRs alongside ``BENCH_kernels.json``.  The
-multi-device rows need forced host devices; ``benchmarks.run`` sets
+round-loop perf — including sharded train/validate/aggregate scaling with
+device count — is tracked across PRs alongside ``BENCH_kernels.json``.
+The multi-device rows need forced host devices; ``benchmarks.run`` sets
 ``--xla_force_host_platform_device_count=8`` before jax initializes.
+
+Standalone CLI (the CI fast lane's bench smoke step):
+
+  PYTHONPATH=src python -m benchmarks.round_bench --rounds 1 --smoke
 """
 from __future__ import annotations
 
@@ -37,32 +51,83 @@ def _steady_timings(rt, rounds: int):
     return rt.stage_timings
 
 
-def _emit_variant(name: str, timings) -> None:
+def _stack_dim(rt) -> int:
+    """Flattened update dimension D of the runtime's model."""
+    from jax.flatten_util import ravel_pytree
+
+    return int(ravel_pytree(rt.global_params())[0].shape[0])
+
+
+def _stage_bytes(rt, quantized: bool):
+    """Modeled update-stack HBM traffic per round for the validate and
+    aggregate stages (the bytes column of BENCH_round.json).
+
+    validate — P candidates against Q member batches: read the P-row
+    update stack + the base params, write the (P, D) f32 candidate stack
+    once (the restructured engine materializes each candidate once per
+    update, not once per (i, j) pair; the sharded engine moves the same
+    bytes, split across shards).  Every default validator scores f32 —
+    the fused int8-view scorers are opt-in and byte-modeled in
+    kernel_bench's ``fused_candidates`` rows.
+
+    aggregate — read the K-row packed stack, write the (D,) result:
+    f32 reads K*D*4; the fused int8 engine reads the int8 stack + scales
+    once (kernel_bench's ``_fused_bytes`` model).
+    """
+    from repro.kernels.ops import padded_dim
+    from repro.kernels.tiling import BLOCK_D
+
+    D = _stack_dim(rt)
+    dpad = padded_dim(D)
+    nblk = dpad // BLOCK_D
+    P = rt.p_trainers
+    K = rt.cfg.k_updates
+    f32_row, int8_row = D * 4, dpad + nblk * 4
+    validate = (P * f32_row          # update stack read
+                + f32_row            # base params read
+                + P * f32_row)       # candidate stack write (once, fused)
+    if quantized:
+        aggregate = K * int8_row + f32_row        # int8 stack read + result
+    else:
+        aggregate = K * f32_row + f32_row         # f32 stack read + result
+    return {"validate": validate, "aggregate": aggregate}
+
+
+def _emit_variant(name: str, timings, stage_bytes=None) -> None:
+    stage_bytes = stage_bytes or {}
     total = 0.0
     for key in STAGE_TIMING_KEYS:
         us = float(np.mean([t[key] for t in timings])) * 1e6
         total += us
-        emit(f"round_{name}_{key}", us)
+        emit(f"round_{name}_{key}", us, nbytes=stage_bytes.get(key))
     emit(f"round_{name}_total", total,
          f"rounds={len(timings)};stages={len(STAGE_TIMING_KEYS)}")
 
 
-def run(full: bool = False):
+def run(full: bool = False, rounds: int | None = None, smoke: bool = False):
     import jax
 
     from repro.launch.mesh import make_round_mesh
 
     # community sized so p_trainers (= n_active - q_committee) lands on a
     # multiple of 8: the sharded rows then measure scaling, not padding
-    # (42 clients -> 21 active, q=5, P=16; 84 -> 42 active, q=10, P=32)
-    clients = 84 if full else 42
-    rounds = 6 if full else 3
+    # (42 clients -> 21 active, q=5, P=16; 84 -> 42 active, q=10, P=32).
+    # Smoke mode (the CI bench step) shrinks everything to compile+run
+    # sanity scale: the rows exist and are ordered, not steady-state.
+    if smoke:
+        clients, width, steps = 18, 4, 2
+        rounds = 1 if rounds is None else rounds
+    else:
+        clients = 84 if full else 42
+        width, steps = (16, 10) if full else (8, 10)
+        rounds = (6 if full else 3) if rounds is None else rounds
     ds = make_femnist_like(num_clients=clients, mean_samples=60,
-                           test_size=400, seed=2)
-    adapter = femnist_adapter(width=16 if full else 8)
+                           test_size=400 if not smoke else 80, seed=2)
+    adapter = femnist_adapter(width=width)
 
     base = dict(active_proportion=0.5, committee_fraction=0.25,
-                k_updates=6, local_steps=10, local_batch=32, seed=0)
+                k_updates=6 if not smoke else 3, local_steps=steps,
+                local_batch=32 if not smoke else 8, seed=0)
     int8 = dict(base, quantize_chain=True, use_kernels=True)
 
     print("# round-loop per-stage timings (us, mean over steady-state "
@@ -70,14 +135,19 @@ def run(full: bool = False):
     print("variant_stage,us")
     for variant, cfg in (("f32", base), ("int8", int8)):
         rt = build_runtime(adapter, ds, dict(cfg))
-        _emit_variant(variant, _steady_timings(rt, rounds))
+        timings = _steady_timings(rt, rounds)
+        _emit_variant(variant, timings,
+                      _stage_bytes(rt, quantized=(variant == "int8")))
         assert rt.chain.verify()
 
-    # sharded engine: train shard_mapped over the data axis, aggregation
-    # D-sharded — one row set per device count so BENCH_round.json tracks
-    # scaling (on CPU the forced devices share the host's cores: train
-    # scales until the core budget is spent, aggregate is bandwidth-bound)
+    # sharded engine: train AND committee validation shard_mapped over the
+    # data axis, aggregation D-sharded — one row set per device count so
+    # BENCH_round.json tracks scaling (on CPU the forced devices share the
+    # host's cores: train/validate scale until the core budget is spent,
+    # aggregate is bandwidth-bound)
     ndevs = [n for n in (1, 2, 4, 8) if n <= len(jax.devices())]
+    if smoke:
+        ndevs = ndevs[:2]
     if len(ndevs) < 2:
         print("# (single device only: run under "
               "XLA_FLAGS=--xla_force_host_platform_device_count=8 "
@@ -85,9 +155,40 @@ def run(full: bool = False):
     for ndev in ndevs:
         rt = build_runtime(adapter, ds, dict(int8),
                            mesh=make_round_mesh(ndev))
-        _emit_variant(f"sharded_dev{ndev}", _steady_timings(rt, rounds))
+        timings = _steady_timings(rt, rounds)
+        _emit_variant(f"sharded_dev{ndev}", timings,
+                      _stage_bytes(rt, quantized=True))
         assert rt.chain.verify()
 
 
 if __name__ == "__main__":
-    run(full=True)
+    import argparse
+
+    # forced host devices for the sharded rows, set before jax touches its
+    # backend (module imports above don't query devices)
+    from repro.hostdevices import force_host_devices
+
+    force_host_devices()
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale community (slow)")
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="timed rounds per variant (default: 3, 6 with "
+                         "--full, 1 with --smoke)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI sanity scale: tiny community, 2 device counts")
+    ap.add_argument("--out", default=None,
+                    help="also write the emitted rows as JSON (the CI smoke "
+                         "step uploads this so PR artifacts carry measured "
+                         "numbers, not just the committed snapshots)")
+    args = ap.parse_args()
+    run(full=args.full, rounds=args.rounds, smoke=args.smoke)
+    if args.out:
+        import json
+
+        from benchmarks.common import RESULTS
+
+        with open(args.out, "w") as f:
+            json.dump(RESULTS, f, indent=2)
+        print(f"# wrote {args.out}")

@@ -62,10 +62,14 @@ def build_runtime(
     ``evaluate()``, and per-round ``stage_timings``.
 
     ``mesh`` (e.g. ``repro.launch.mesh.make_round_mesh(8)``) selects the
-    sharded multi-device round engine: local training is shard_mapped over
-    the mesh's data axis (``local_sgd_sharded``), and with
-    ``quantize_chain=True`` packing + aggregation run D-sharded
-    (``top_k_int8_sharded`` / ``fused_int8_sharded``).  ``stages`` still
+    sharded multi-device round engine: local training AND committee
+    validation are shard_mapped over the mesh's data axis
+    (``local_sgd_sharded`` / ``committee_sharded`` — the P x Q score
+    matrix is computed P-sharded and reproduces the single-device scores
+    bit-for-bit), and with ``quantize_chain=True`` packing + aggregation
+    run D-sharded (``top_k_int8_sharded`` / ``fused_int8_sharded``) and
+    the fused score-from-int8 validators (``committee_int8`` /
+    ``committee_int8_sharded``) become available.  ``stages`` still
     overrides any stage by name or callable."""
     cfg = build_config(cfg, baseline=baseline)
     if isinstance(cfg, FLConfig):

@@ -41,9 +41,40 @@ def init_params(key, *, width: int = 32, num_classes: int = NUM_CLASSES) -> Dict
     }
 
 
+# patch width (kh*kw*C_in) at or below which _conv lowers to im2col + GEMM
+# instead of lax.conv.  Small-C_in convs (conv1: 3*3*1 = 9) are the round
+# loop's hot spot once weights carry a batch axis: vmapping lax.conv over a
+# P-stack of kernels (P candidate models in committee validation, P client
+# models in local training) lowers to a grouped convolution that XLA:CPU
+# executes at under 1 GFLOP/s, while the same contraction as a dot_general
+# batches into one GEMM.  The unbatched forward is bitwise identical to
+# lax.conv (same 9-tap summation); under vmapped weights and in the
+# backward pass the accumulation order differs, so training numerics (and
+# therefore seeded chain hashes / regression pins) shift within float
+# tolerance — the differential test harness compares engines built from
+# the same lowering, so parity suites are unaffected.  Above the limit
+# (conv2: 3*3*8 = 72) the patch tensor's kh*kw-fold blowup costs more
+# memory traffic than the grouped conv, so lax.conv stays.
+_GEMM_PATCH_LIMIT = 32
+
+
 def _conv(x, p):
+    w = p["w"]
+    kh, kw, cin, cout = w.shape
+    if kh * kw * cin <= _GEMM_PATCH_LIMIT and kh % 2 == 1 and kw % 2 == 1:
+        # im2col (SAME padding, stride 1): 9 shifted views concatenated on
+        # the channel axis, then one (B*H*W, kh*kw*C) @ (kh*kw*C, F) GEMM
+        H, W = x.shape[1], x.shape[2]
+        xp = jnp.pad(x, ((0, 0), (kh // 2, kh // 2), (kw // 2, kw // 2), (0, 0)))
+        taps = [
+            xp[:, dy : dy + H, dx : dx + W, :]
+            for dy in range(kh)
+            for dx in range(kw)
+        ]
+        pat = jnp.concatenate(taps, axis=-1)
+        return jnp.tensordot(pat, w.reshape(kh * kw * cin, cout), axes=1) + p["b"]
     y = jax.lax.conv_general_dilated(
-        x, p["w"], window_strides=(1, 1), padding="SAME",
+        x, w, window_strides=(1, 1), padding="SAME",
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
     )
     return y + p["b"]

@@ -7,7 +7,10 @@ of the round at once (this is also exactly the structure the sharded
 production path distributes over the mesh's data axis).
 
 Committee validation is the same trick: the (P updates x Q members) accuracy
-matrix — the P*Q cost term of §V.A — is one nested-vmap call.
+matrix — the P*Q cost term of §V.A — is one batched call, each candidate
+model materialized once and evaluated on all Q member batches in a single
+batched forward (and the same program shard_maps over the mesh's data axis
+for the multi-device engine).
 """
 from __future__ import annotations
 
@@ -75,20 +78,123 @@ def make_sharded_local_train_fn(adapter: ModelAdapter, lr: float, mesh,
     ))
 
 
+def _score_matrix_program(adapter: ModelAdapter):
+    """The unjitted (params, updates, val_x, val_y) -> (P, Q) program.
+
+    Per candidate i, ``params + update_i`` is materialized exactly once —
+    hoisted out of the member axis — and all Q member val batches are
+    evaluated in one batched forward on that shared candidate (the member
+    vmap carries the data axis only; the weights stay unbatched, so XLA
+    folds the Q batches into a single forward).  Both the single-device
+    validator and the shard_mapped multi-device validator wrap exactly
+    this function, so a P-shard's score rows are bitwise identical to the
+    single-device oracle's."""
+
+    def one_candidate(params, update, vx, vy):
+        candidate = jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, update)
+        return jax.vmap(adapter.accuracy, in_axes=(None, 0, 0))(candidate, vx, vy)
+
+    def score(params, updates, vx, vy):
+        return jax.vmap(one_candidate, in_axes=(None, 0, None, None))(
+            params, updates, vx, vy
+        )
+
+    return score
+
+
 def make_score_matrix_fn(adapter: ModelAdapter):
     """Returns score(params, updates, val_x, val_y) -> (P, Q) accuracies.
 
     updates: P-stacked pytree; val_x: (Q, vb, ...), val_y: (Q, vb).
     Entry [i, j] = accuracy of (global + update_i) on member j's data —
     the committee's minimized validation approach (§III.B)."""
+    return jax.jit(_score_matrix_program(adapter))
 
-    def one(params, update, vx, vy):
-        candidate = jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, update)
-        return adapter.accuracy(candidate, vx, vy)
 
-    over_members = jax.vmap(one, in_axes=(None, None, 0, 0))
-    over_updates = jax.vmap(over_members, in_axes=(None, 0, None, None))
-    return jax.jit(over_updates)
+def make_sharded_score_matrix_fn(adapter: ModelAdapter, mesh, axis: str = "data"):
+    """The P x Q score-matrix program shard_mapped over the mesh's data axis.
+
+    The update stack arrives P-sharded (each device scores its own
+    candidate rows against the replicated params + member val batches);
+    only the (P, Q) score matrix itself is gathered at the stage boundary
+    — the candidate pytrees never leave their shard.  The caller pads P to
+    a multiple of the axis size (mirroring the trainer's `_pad_clients`);
+    score rows are independent, so padded rows are sliced off without
+    affecting real candidates."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.shard_compat import shard_map
+
+    return jax.jit(shard_map(
+        _score_matrix_program(adapter), mesh=mesh,
+        in_specs=(P(), P(axis), P(), P()),
+        out_specs=P(axis),
+    ))
+
+
+def _int8_score_program(adapter: ModelAdapter, unravel, interpret: bool):
+    """Unjitted (params, stack, val_x, val_y) -> (rows, Q) from the int8 view.
+
+    ``stack``: (rows, D) f32 flattened updates.  Each row is quantized with
+    the chain codec's tiling (so the committee scores exactly the int8 blob
+    that would land on chain), then the fused Pallas pass rebuilds every
+    candidate in one read — int8 row dequantized in-register and the delta
+    applied during the base-parameter load — so the f32 (rows, D) candidate
+    stack is materialized once, not twice (PR 1's fused-aggregation trick
+    applied to validation)."""
+    from jax.flatten_util import ravel_pytree
+
+    from repro.kernels.fused_score import make_fused_candidates_fn
+    from repro.kernels.ops import _pad_to_block
+    from repro.kernels.quantize import quantize_stack_kernel
+
+    fused_candidates = make_fused_candidates_fn(interpret=interpret)
+
+    def score(params, stack, vx, vy):
+        D = stack.shape[1]
+        q, s = quantize_stack_kernel(_pad_to_block(stack)[0],
+                                     interpret=interpret)
+        flat, _ = ravel_pytree(params)
+        base = _pad_to_block(flat.astype(jnp.float32))[0]
+        cands = fused_candidates(base, q, s)
+
+        def one_candidate(row, vx, vy):
+            candidate = unravel(row[:D])
+            return jax.vmap(adapter.accuracy, in_axes=(None, 0, 0))(
+                candidate, vx, vy
+            )
+
+        return jax.vmap(one_candidate, in_axes=(0, None, None))(cands, vx, vy)
+
+    return score
+
+
+def make_score_from_int8_fn(adapter: ModelAdapter, unravel):
+    """Single-device fused int8 scorer: (params, (P, D) stack, vx, vy) ->
+    (P, Q) accuracies of the quantized candidates (chain-codec view)."""
+    from repro.kernels.ops import _interpret
+
+    return jax.jit(_int8_score_program(adapter, unravel, _interpret()))
+
+
+def make_sharded_score_from_int8_fn(adapter: ModelAdapter, mesh, unravel,
+                                    axis: str = "data"):
+    """The fused int8 scorer shard_mapped over the mesh's data axis: each
+    device quantizes and scores its own P-shard of update rows (rows are
+    tile-local, so per-row blobs — and therefore scores — are bitwise
+    identical to the single-device int8 scorer); only the (P, Q) score
+    matrix is gathered.  The caller pads P to a multiple of the axis
+    size."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.kernels.ops import _interpret
+    from repro.shard_compat import shard_map
+
+    return jax.jit(shard_map(
+        _int8_score_program(adapter, unravel, _interpret()), mesh=mesh,
+        in_specs=(P(), P(axis), P(), P()),
+        out_specs=P(axis),
+    ))
 
 
 def make_eval_fn(adapter: ModelAdapter, eval_batch: int = 512):

@@ -97,10 +97,15 @@ class RoundContext:
     sharded_train_fn: Any = None           # shard_mapped local-SGD program
     sharded_quantize_fn: Any = None        # per-shard int8 stack codec
     sharded_agg_fn: Any = None             # D-sharded fused int8 reducer
+    sharded_score_fn: Any = None           # P-sharded score-matrix program
+    int8_score_fn: Any = None              # fused int8 scorer (single device)
+    sharded_int8_score_fn: Any = None      # P-sharded fused int8 scorer
     # per-cohort state (overwritten each cohort)
     cohort: int = 0
     trainers: List[int] = field(default_factory=list)
     cohort_updates: List[Any] = field(default_factory=list)
+    cohort_stacked: Any = None             # trainer's P-padded update stack
+    cohort_poisoned: List[int] = field(default_factory=list)
     # accumulated collection state
     trainers_total: List[int] = field(default_factory=list)
     updates: Dict[int, Any] = field(default_factory=dict)     # uploader -> update
@@ -278,14 +283,18 @@ class RoundPipeline:
 def default_stage_names(cfg, mesh=None) -> Dict[str, str]:
     """The BFLC wiring for a config: quantize_chain flips the packer +
     aggregator pair to the fused-int8 engine; a mesh flips local training
-    (and, when quantized, the packer + aggregator) to the sharded
-    multi-device engine (repro.fl.sharded)."""
+    and committee validation (and, when quantized, the packer + aggregator)
+    to the sharded multi-device engine (repro.fl.sharded).  The sharded
+    validator scores f32 in every config — it reproduces the single-device
+    score matrix bit-for-bit; the quantized-view scorers
+    (``committee_int8`` / ``committee_int8_sharded``) are opt-in via
+    ``stages=`` because int8 scoring noise moves median scores."""
     quantized = bool(getattr(cfg, "quantize_chain", False))
     sharded = mesh is not None
     names = {
         "sampler": "active",
         "local_trainer": "local_sgd_sharded" if sharded else "local_sgd",
-        "validator": "committee",
+        "validator": "committee_sharded" if sharded else "committee",
         "packer": "top_k_int8" if quantized else "top_k",
         "aggregator": "fused_int8" if quantized else "pytree",
         "elector": "by_candidates",
@@ -390,15 +399,23 @@ def sample_cohort_batches(ctx: RoundContext):
     return np.stack([p[0] for p in pairs]), np.stack([p[1] for p in pairs])
 
 
-def poison_cohort_updates(ctx: RoundContext, updates: List[Any]) -> None:
-    """Per-node attack injection for malicious trainers (in place)."""
+def poison_cohort_updates(ctx: RoundContext, updates: List[Any]) -> List[int]:
+    """Per-node attack injection for malicious trainers (in place).
+
+    Returns the poisoned indices (also recorded in ``ctx.cohort_poisoned``)
+    so sharded validators know whether the trainer's device-resident update
+    stack still matches the host-side update list."""
     cfg, rng = ctx.cfg, ctx.rng
     attack = ATTACKS[cfg.attack]
+    poisoned = []
     for idx, node_id in enumerate(ctx.trainers):
         if ctx.is_malicious(node_id):
             updates[idx] = attack(
                 rng, updates[idx], cfg.attack_sigma, ref=ctx.params
             ) if cfg.attack == "gaussian" else attack(rng, updates[idx])
+            poisoned.append(idx)
+    ctx.cohort_poisoned = poisoned
+    return poisoned
 
 
 @register("local_trainer", "local_sgd")
@@ -408,16 +425,20 @@ def train_local_sgd(ctx: RoundContext) -> None:
     xs, ys = sample_cohort_batches(ctx)
     stacked = ctx.local_train_fn(ctx.params, xs, ys)
     updates = _unstack(stacked, len(ctx.trainers))
+    ctx.cohort_stacked = None              # single-device: no sharded stack
     poison_cohort_updates(ctx, updates)
     ctx.cohort_updates = updates
 
 
 class CommitteeValidator:
-    """(3) committee scoring: the P x Q accuracy matrix in one nested-vmap
+    """(3) committee scoring: the P x Q accuracy matrix in one batched
     call, collusion overlay, median acceptance via CommitteeConsensus.
 
     ``prepare`` runs once per round: samples each member's validation
-    batch and binds the (live) score table to the consensus object."""
+    batch and binds the (live) score table to the consensus object.
+    ``_honest_scores`` is the engine hook — subclasses swap in the
+    sharded / fused-int8 score programs (repro.fl.sharded) without
+    touching the consensus bookkeeping below."""
 
     def prepare(self, ctx: RoundContext) -> None:
         cfg, rng = ctx.cfg, ctx.rng
@@ -435,13 +456,17 @@ class CommitteeValidator:
         )
         ctx.consensus.bind_score_table(ctx.score_table)
 
-    def __call__(self, ctx: RoundContext) -> None:
-        cfg, rng = ctx.cfg, ctx.rng
-        honest_scores = np.asarray(
+    def _honest_scores(self, ctx: RoundContext) -> np.ndarray:
+        """The (P, Q) accuracy matrix of this cohort's candidates."""
+        return np.asarray(
             ctx.score_matrix_fn(
                 ctx.params, _stack(ctx.cohort_updates), ctx.val_x, ctx.val_y
             )
-        )                                               # (P, Q)
+        )
+
+    def __call__(self, ctx: RoundContext) -> None:
+        cfg, rng = ctx.cfg, ctx.rng
+        honest_scores = self._honest_scores(ctx)        # (P, Q)
         for i, uploader in enumerate(ctx.trainers):
             row = {}
             for j, member in enumerate(ctx.round_committee):
@@ -467,6 +492,31 @@ class CommitteeValidator:
 
 
 register("validator", "committee")(CommitteeValidator())
+
+
+class Int8CommitteeValidator(CommitteeValidator):
+    """Committee scoring straight from the chain-codec int8 view of each
+    update (opt-in: ``stages={"validator": "committee_int8"}``): the fused
+    Pallas pass rebuilds every candidate from its quantized row in one
+    read, so the committee scores exactly the blob a quantizing packer
+    would store.  Scores differ from the f32 validator by quantization
+    noise only (tolerance-bounded in tests), so it is not the default —
+    the default stays bit-compatible with the f32 oracle."""
+
+    def _honest_scores(self, ctx: RoundContext) -> np.ndarray:
+        if ctx.int8_score_fn is None:
+            raise RuntimeError(
+                "committee_int8 needs ctx.int8_score_fn — build the runtime "
+                "with quantize_chain=True (the fused scorer shares the "
+                "chain codec's unravel structure)"
+            )
+        stack, _ = flatten_updates(ctx.cohort_updates)
+        return np.asarray(
+            ctx.int8_score_fn(ctx.params, stack, ctx.val_x, ctx.val_y)
+        )
+
+
+register("validator", "committee_int8")(Int8CommitteeValidator())
 
 
 @register("validator", "accept_all")

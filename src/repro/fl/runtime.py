@@ -167,8 +167,14 @@ class BFLCRuntime:
         self._sharded_train = None
         self._sharded_quantize = None
         self._sharded_agg = None
+        self._sharded_score = None
+        self._int8_score = None
+        self._sharded_int8_score = None
         if mesh is not None:
-            from repro.fl.client import make_sharded_local_train_fn
+            from repro.fl.client import (
+                make_sharded_local_train_fn,
+                make_sharded_score_matrix_fn,
+            )
             from repro.kernels.ops import (
                 make_aggregate_quantized_sharded,
                 make_quantize_stack_sharded,
@@ -177,10 +183,28 @@ class BFLCRuntime:
             self._sharded_train = make_sharded_local_train_fn(
                 adapter, cfg.local_lr, mesh, momentum=cfg.momentum
             )
+            self._sharded_score = make_sharded_score_matrix_fn(adapter, mesh)
             if cfg.quantize_chain:
                 self._sharded_quantize = make_quantize_stack_sharded(mesh)
                 self._sharded_agg = make_aggregate_quantized_sharded(
                     mesh, method=cfg.aggregation, trim=cfg.trim
+                )
+        if cfg.quantize_chain:
+            # fused score-from-int8 programs (opt-in committee_int8 /
+            # committee_int8_sharded validators) share the chain codec's
+            # unravel structure, so scored candidates decode exactly like
+            # stored blobs
+            from repro.fl.client import (
+                make_score_from_int8_fn,
+                make_sharded_score_from_int8_fn,
+            )
+
+            self._int8_score = make_score_from_int8_fn(
+                adapter, self._codec.unravel
+            )
+            if mesh is not None:
+                self._sharded_int8_score = make_sharded_score_from_int8_fn(
+                    adapter, mesh, self._codec.unravel
                 )
 
         # fixed per-round sizes: keeps XLA programs shape-stable (one compile).
@@ -249,6 +273,9 @@ class BFLCRuntime:
             sharded_train_fn=self._sharded_train,
             sharded_quantize_fn=self._sharded_quantize,
             sharded_agg_fn=self._sharded_agg,
+            sharded_score_fn=self._sharded_score,
+            int8_score_fn=self._int8_score,
+            sharded_int8_score_fn=self._sharded_int8_score,
         )
         self.pipeline.run(ctx)
         self.committee = ctx.committee

@@ -20,11 +20,26 @@ edits to the round loop:
 * ``aggregator = "fused_int8_sharded"`` — each device runs the fused
   int8->dequant->reduce kernel (PR 1) on its D-shard of the stack, then the
   model block is all-gathered (XLA inserts it at the first replicated use).
+* ``validator = "committee_sharded"`` — the P x Q committee score matrix
+  (paper §III.B, the consensus-side cost term of §V.A) shard_mapped over
+  the mesh's data axis: each device scores its own P-shard of candidate
+  rows against the replicated params + member val batches.  Updates arrive
+  P-sharded straight from ``local_sgd_sharded`` (no intermediate
+  all-gather when no row was poisoned); only the (P, Q) score matrix is
+  gathered at the stage boundary, per the trainer's
+  boundary-materialization rule.  Scores are bitwise identical to the
+  single-device oracle — same per-candidate XLA program, just sharded.
+* ``validator = "committee_int8_sharded"`` (opt-in) — same sharding, but
+  each device quantizes its update rows with the chain codec and rebuilds
+  candidates via the fused score-from-int8 Pallas pass
+  (``repro.kernels.fused_score``): the committee scores exactly the blob a
+  quantizing packer would store, within int8 tolerance of the f32 scores.
 
 The stages read their pre-built programs from ``RoundContext``
-(``sharded_train_fn`` / ``sharded_quantize_fn`` / ``sharded_agg_fn``, built
-once per runtime by ``BFLCRuntime(..., mesh=...)`` — see
-``repro.api.build_runtime``).  Everything runs on CPU under
+(``sharded_train_fn`` / ``sharded_quantize_fn`` / ``sharded_agg_fn`` /
+``sharded_score_fn`` / ``sharded_int8_score_fn``, built once per runtime
+by ``BFLCRuntime(..., mesh=...)`` — see ``repro.api.build_runtime``).
+Everything runs on CPU under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``, which is how the
 differential test harness (tests/test_sharded_round.py) exercises 1/2/8
 devices without a TPU.
@@ -32,14 +47,17 @@ devices without a TPU.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.aggregation import flatten_updates, normalize_weights
 from repro.fl.pipeline import (
+    CommitteeValidator,
     RoundContext,
     _select_top_k,
     _set_packed,
     _commit_aggregate,
+    _stack,
     _unstack,
     poison_cohort_updates,
     register,
@@ -57,16 +75,27 @@ def _require(ctx: RoundContext, field: str, stage: str):
     return fn
 
 
-def _pad_clients(xs: np.ndarray, ys: np.ndarray, ndev: int):
-    """Pad the leading client axis to a multiple of the mesh's data-axis
-    size by repeating the last client's batches (per-client programs are
-    independent, so padded rows never contaminate real clients)."""
-    P = xs.shape[0]
-    pad = (-P) % ndev
+def _pad_rows(tree, n: int, ndev: int):
+    """Pad the leading (client) axis of a stacked pytree / array to a
+    multiple of the mesh's data-axis size by repeating the last row.
+    Per-row programs (local SGD, committee scoring) are independent, so
+    padded rows never contaminate real clients and score rows are simply
+    sliced off."""
+    pad = (-n) % ndev
     if pad == 0:
-        return xs, ys, P
-    xs = np.concatenate([xs, np.repeat(xs[-1:], pad, axis=0)])
-    ys = np.concatenate([ys, np.repeat(ys[-1:], pad, axis=0)])
+        return tree
+    return jax.tree.map(
+        lambda x: np.concatenate([x, np.repeat(x[-1:], pad, axis=0)])
+        if isinstance(x, np.ndarray)
+        else jnp.concatenate([x, jnp.repeat(x[-1:], pad, axis=0)]),
+        tree,
+    )
+
+
+def _pad_clients(xs: np.ndarray, ys: np.ndarray, ndev: int):
+    """The trainer's batch padding: one `_pad_rows` over the (xs, ys) pair."""
+    P = xs.shape[0]
+    xs, ys = _pad_rows((xs, ys), P, ndev)
     return xs, ys, P
 
 
@@ -80,13 +109,16 @@ def train_local_sgd_sharded(ctx: RoundContext) -> None:
     xs, ys = sample_cohort_batches(ctx)
     xs, ys, n = _pad_clients(xs, ys, ndev)
     stacked = train_fn(ctx.params, xs, ys)
-    # materialize the all-gather here, once: the downstream stages (P x Q
-    # committee scoring, packing) are single-device programs, and feeding
-    # them a device-committed P-sharded stack makes GSPMD replicate their
-    # compute per shard (observed: validate wall-clock doubling with every
-    # device-count doubling before this gather)
-    stacked = jax.device_get(stacked)
-    updates = _unstack(stacked, n)          # padded rows never unstacked
+    # the P-sharded update stack (padded rows included) stays on its
+    # devices for the sharded validator — committee scoring consumes it
+    # with zero relayout.  The host copy below is still needed: poisoning,
+    # per-uploader bookkeeping (ctx.updates) and packing are host-side,
+    # and feeding the later single-device stages a device-committed
+    # P-sharded stack would make GSPMD replicate their compute per shard
+    # (observed: pack/aggregate re-sharding pathology before this gather).
+    ctx.cohort_stacked = stacked
+    host = jax.device_get(stacked)
+    updates = _unstack(host, n)             # padded rows never unstacked
     poison_cohort_updates(ctx, updates)
     ctx.cohort_updates = updates
 
@@ -113,6 +145,57 @@ def pack_top_k_int8_sharded(ctx: RoundContext) -> None:
         )
         ctx.manager.nodes[u].score_history.append(sc)
     ctx.packed_quantized = (q, s, d, unravel)
+
+
+class ShardedCommitteeValidator(CommitteeValidator):
+    """(3, sharded) the P x Q committee score matrix shard_mapped over the
+    mesh's data axis — each device scores its P-shard of candidates; only
+    the (P, Q) matrix is gathered at the stage boundary.  Consensus
+    bookkeeping (collusion overlay, median acceptance, trigger) is
+    inherited unchanged from ``CommitteeValidator``."""
+
+    def _honest_scores(self, ctx: RoundContext) -> np.ndarray:
+        score_fn = _require(ctx, "sharded_score_fn", "committee_sharded")
+        mesh = _require(ctx, "mesh", "committee_sharded")
+        ndev = dict(mesh.shape).get("data", mesh.devices.size)
+        n = len(ctx.cohort_updates)
+        if ctx.cohort_stacked is not None and not ctx.cohort_poisoned:
+            # the trainer's update stack is still bit-identical to the
+            # host-side update list AND already P-sharded on this mesh:
+            # score it in place — no host round-trip, no relayout
+            stacked = ctx.cohort_stacked
+        else:
+            stacked = _pad_rows(_stack(ctx.cohort_updates), n, ndev)
+        scores = score_fn(ctx.params, stacked, ctx.val_x, ctx.val_y)
+        return np.asarray(scores)[:n]
+
+
+register("validator", "committee_sharded")(ShardedCommitteeValidator())
+
+
+class Int8ShardedCommitteeValidator(CommitteeValidator):
+    """(3, sharded, opt-in) fused score-from-int8: each device quantizes
+    its P-shard of update rows with the chain codec and rebuilds the
+    candidates in one fused Pallas read (dequantize in-register, delta
+    applied during the base-parameter load) — the committee scores exactly
+    the blob a quantizing packer would store, and the f32 (P, D) stack is
+    materialized once, never twice."""
+
+    def _honest_scores(self, ctx: RoundContext) -> np.ndarray:
+        score_fn = _require(
+            ctx, "sharded_int8_score_fn", "committee_int8_sharded"
+        )
+        mesh = _require(ctx, "mesh", "committee_int8_sharded")
+        ndev = dict(mesh.shape).get("data", mesh.devices.size)
+        stack, _ = flatten_updates(ctx.cohort_updates)
+        n = stack.shape[0]
+        scores = score_fn(
+            ctx.params, _pad_rows(stack, n, ndev), ctx.val_x, ctx.val_y
+        )
+        return np.asarray(scores)[:n]
+
+
+register("validator", "committee_int8_sharded")(Int8ShardedCommitteeValidator())
 
 
 @register("aggregator", "fused_int8_sharded")

@@ -1,7 +1,8 @@
 """Pallas TPU kernels for the BFLC round hot path.
 
 Layout: one module per kernel (fedavg_agg, cwmed + trimmed_mean, quantize,
-fused_agg) + ``ops`` (the padded, jit'd, method-dispatch public layer) +
+fused_agg, fused_score) + ``ops`` (the padded, jit'd, method-dispatch
+public layer) +
 ``ref`` (pure-jnp oracles the tests allclose against).  Import the public
 API from here; reach into submodules only for the raw ``pallas_call``
 wrappers.
@@ -12,6 +13,7 @@ from repro.kernels.ops import (
     Int8UpdateCodec,
     aggregate,
     aggregate_quantized,
+    candidates_from_quantized,
     cwmed,
     dequantize,
     dequantize_pytree,
@@ -29,6 +31,7 @@ __all__ = [
     "Int8UpdateCodec",
     "aggregate",
     "aggregate_quantized",
+    "candidates_from_quantized",
     "cwmed",
     "dequantize",
     "dequantize_pytree",

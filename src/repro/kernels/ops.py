@@ -173,6 +173,29 @@ def aggregate_quantized(
     return out[:true_d]
 
 
+def candidates_from_quantized(
+    base: jnp.ndarray,
+    q: jnp.ndarray,
+    scales: jnp.ndarray,
+    D: Optional[int] = None,
+) -> jnp.ndarray:
+    """Fused candidate rebuild straight from the chain's int8 blocks.
+
+    base: (D,) f32 global params; q: (K, Dpad) int8 update rows; scales:
+    (K, Dpad // BLOCK_D) f32.  Returns the (K, D) f32 candidate stack
+    ``base + dequant(q_k)`` — one int8 read of the stack, dequantized
+    in-register with the delta applied during the base-parameter load, so
+    the f32 update stack is never materialized (the validation-side mirror
+    of ``aggregate_quantized``)."""
+    from repro.kernels.fused_score import fused_candidates_kernel
+
+    K, Dpad = q.shape
+    true_d = Dpad if D is None else D
+    padded, _ = _pad_to_block(base.astype(jnp.float32))
+    out = fused_candidates_kernel(padded, q, scales, interpret=_interpret())
+    return out[:, :true_d]
+
+
 # ----------------------------------------------------------------------
 # sharded multi-device engine (one program per mesh, built once)
 # ----------------------------------------------------------------------

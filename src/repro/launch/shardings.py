@@ -260,3 +260,29 @@ def round_engine_pspecs(axis: str = "data") -> dict:
         "dvec": P(axis),
         "replicated": P(),
     }
+
+
+def score_matrix_pspecs(axis: str = "data") -> dict:
+    """The sharded committee-validation engine's data layout (the P x Q
+    score matrix of paper §III.B, sharded stage `committee_sharded`):
+
+    * ``updates``    — candidate-stacked leaves (P, ...): P over the data
+      axis (update rows arrive P-sharded straight from the trainer);
+    * ``int8_rows``  — (P, Dpad) int8 rows + (P, nblk) scales of the fused
+      score-from-int8 path: P over the data axis (each device quantizes
+      and rebuilds its own candidate rows; tiles are row-local, so blobs
+      coincide with the single-device chain codec);
+    * ``scores``     — the (P, Q) score matrix: P over the data axis —
+      the ONLY array gathered at the validate stage boundary;
+    * ``replicated`` — global params and the (Q, vb, ...) member val
+      batches.
+
+    ``make_sharded_score_matrix_fn`` / ``make_sharded_score_from_int8_fn``
+    (repro.fl.client) encode exactly these specs; the differential test
+    harness asserts the arrays they produce actually carry them."""
+    return {
+        "updates": P(axis),
+        "int8_rows": P(axis),
+        "scores": P(axis),
+        "replicated": P(),
+    }

@@ -107,6 +107,25 @@ def test_fused_matches_staged_dequant_exactly(method):
     np.testing.assert_allclose(out, oracle, atol=1e-5)
 
 
+@pytest.mark.parametrize("K", KS)
+@pytest.mark.parametrize("D", DS_RAGGED)
+def test_fused_candidates_matches_staged(K, D):
+    # the validation-side fused pass (score-from-int8): one read of the
+    # int8 rows with the base-params delta applied in-register must equal
+    # the staged dequantize-then-add pipeline to float tolerance (XLA may
+    # contract the in-register base + q*scale into an fma, so the staged
+    # path's intermediate f32 rounding is the only permitted divergence)
+    stack, _ = _stack_and_weights(K, D, seed=K)
+    base = _stack_and_weights(1, D, seed=K + 7)[0][0]
+    q, s, d = ops.quantize_stack(stack)
+    fused = ops.candidates_from_quantized(base, q, s, d)
+    staged = jnp.stack([ops.dequantize(q[i], s[i], d) for i in range(K)])
+    staged = staged + base[None, :d]
+    assert fused.shape == (K, D)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(staged),
+                               atol=1e-5)
+
+
 @pytest.mark.parametrize("method", METHODS)
 @pytest.mark.parametrize("D", (2048, 5000))
 def test_fused_quantize_out_roundtrip_bound(method, D):

@@ -4,10 +4,14 @@ Every test runs the SAME community/seed through the single-device stages
 and the sharded stages (1, 2 and 8 forced CPU devices — conftest forces
 ``--xla_force_host_platform_device_count=8``) and compares:
 
-* f32 path (``local_sgd_sharded`` + dense aggregation): update pytrees
-  allclose AND chain fingerprints (block hashes, packed uploader ids) and
-  ``RoundLog``s **identical** — per-client local SGD is the same XLA
-  program on every device, so sharding may not change a single bit;
+* f32 path (``local_sgd_sharded`` + ``committee_sharded`` + dense
+  aggregation): update pytrees allclose AND chain fingerprints (block
+  hashes, packed uploader ids) and ``RoundLog``s **identical** — per-client
+  local SGD and per-candidate committee scoring are the same XLA programs
+  on every device, so sharding may not change a single bit (the full-round
+  parity tests below exercise the sharded P x Q validator implicitly: it
+  is the default whenever a mesh is passed, and score medians land on the
+  chain as block scores);
 * int8 path (``top_k_int8_sharded`` + ``fused_int8_sharded``): the sharded
   codec pads D to the shard boundary, so chain blobs differ in length and
   hashes legitimately diverge — the aggregated model params must stay
@@ -21,6 +25,7 @@ regression anywhere in the sharded engine shows up as a hash or log
 mismatch against the single-device oracle.
 """
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -30,9 +35,13 @@ from repro.data import make_femnist_like
 from repro.fl import femnist_adapter
 from repro.fl.client import (
     make_local_train_fn,
+    make_score_from_int8_fn,
+    make_score_matrix_fn,
     make_sharded_local_train_fn,
+    make_sharded_score_from_int8_fn,
+    make_sharded_score_matrix_fn,
 )
-from repro.launch.shardings import round_engine_pspecs
+from repro.launch.shardings import round_engine_pspecs, score_matrix_pspecs
 
 DEVICE_COUNTS = (1, 2, 8)
 
@@ -86,6 +95,93 @@ def test_sharded_trainer_matches_vmapped(round_mesh, adapter, ndev, P):
     u_1 = single(params, xs, ys)
     # same per-client XLA program -> bitwise equality, not just allclose
     _leaves_allclose(u_sh, u_1, atol=0.0)
+
+
+# ----------------------------------------------------------------------
+# validator-level differential: sharded P x Q score matrix vs the
+# single-device oracle, including the P-padding path
+# ----------------------------------------------------------------------
+def _score_inputs(adapter, P, Q=3, vb=16, seed=11):
+    params = adapter.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(seed)
+    scale = 0.02
+    updates = jax.tree.map(
+        lambda p: jnp.asarray(
+            rng.normal(0, scale * (np.abs(np.asarray(p)).mean() + 1e-3),
+                       (P,) + p.shape), jnp.float32),
+        params,
+    )
+    vx = np.asarray(rng.normal(size=(Q, vb, 28, 28, 1)), np.float32)
+    vy = np.asarray(rng.integers(0, 62, (Q, vb)))
+    return params, updates, vx, vy
+
+
+def _pad_update_rows(updates, P, ndev):
+    # the engine's own padding rule: the differential check below is the
+    # bitwise comparison against the single-device oracle, so the test
+    # must pad exactly as the sharded validator does
+    from repro.fl.sharded import _pad_rows
+
+    return _pad_rows(updates, P, ndev)
+
+
+@pytest.mark.parametrize("ndev", DEVICE_COUNTS)
+@pytest.mark.parametrize("P", (8, 5))   # 5: P % ndev != 0 -> padding path
+def test_sharded_score_matrix_matches_oracle(round_mesh, adapter, ndev, P):
+    """The f32 sharded validator program reproduces the single-device
+    score matrix bit-for-bit — same per-candidate XLA program, sharded."""
+    mesh = round_mesh(ndev)
+    params, updates, vx, vy = _score_inputs(adapter, P)
+    oracle = make_score_matrix_fn(adapter)
+    sharded = make_sharded_score_matrix_fn(adapter, mesh)
+    want = np.asarray(oracle(params, updates, vx, vy))
+    got = np.asarray(
+        sharded(params, _pad_update_rows(updates, P, ndev), vx, vy)
+    )[:P]
+    assert want.shape == got.shape == (P, vx.shape[0])
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("ndev", DEVICE_COUNTS)
+def test_int8_score_matrix_parity(round_mesh, adapter, ndev):
+    """The fused score-from-int8 path: bitwise identical across device
+    counts (row-local tiles), bitwise identical to the staged
+    dequantize-then-score oracle, and tolerance-bounded against the f32
+    scores (int8 quantization noise only)."""
+    from jax.flatten_util import ravel_pytree
+
+    from repro.kernels import ops
+
+    mesh = round_mesh(ndev)
+    P = 8
+    params, updates, vx, vy = _score_inputs(adapter, P)
+    flat_params, unravel = ravel_pytree(params)
+    stack = jnp.stack(
+        [ravel_pytree(jax.tree.map(lambda x: x[i], updates))[0]
+         for i in range(P)]
+    )
+
+    single = make_score_from_int8_fn(adapter, unravel)
+    sharded = make_sharded_score_from_int8_fn(adapter, mesh, unravel)
+    want = np.asarray(single(params, stack, vx, vy))
+    got = np.asarray(sharded(params, stack, vx, vy))
+    np.testing.assert_array_equal(got, want)
+
+    # staged oracle: quantize rows, dequantize to f32, score with the f32
+    # program — the fused kernel performs the same ops in one pass (an fma
+    # contraction of base + q*scale may flip an exactly-borderline argmax,
+    # so allow at most one flipped sample per (i, j) cell)
+    vb = vy.shape[1]
+    q, s, d = ops.quantize_stack(stack)
+    deq = jnp.stack([ops.dequantize(q[i], s[i], d) for i in range(P)])
+    staged_updates = jax.vmap(unravel)(deq)
+    oracle = make_score_matrix_fn(adapter)
+    staged = np.asarray(oracle(params, staged_updates, vx, vy))
+    assert np.abs(want - staged).max() <= 1.0 / vb + 1e-6
+
+    # quantization noise moves accuracies, but only within int8 tolerance
+    f32 = np.asarray(oracle(params, updates, vx, vy))
+    assert np.abs(want - f32).max() <= 0.25
 
 
 # ----------------------------------------------------------------------
@@ -162,12 +258,39 @@ def test_sharded_engine_shardings_and_stages(round_mesh, ds, adapter):
     assert rt.pipeline.local_trainer is sharded_mod.train_local_sgd_sharded
     assert rt.pipeline.packer is sharded_mod.pack_top_k_int8_sharded
     assert rt.pipeline.aggregator is sharded_mod.aggregate_fused_int8_sharded
+    assert isinstance(rt.pipeline.validator,
+                      sharded_mod.ShardedCommitteeValidator)
     stack = jax.random.normal(jax.random.PRNGKey(0), (4, 4096))
     q, s = rt._sharded_quantize(stack)
     assert q.sharding.spec == specs["dshard"]
     assert s.sharding.spec == specs["dshard"]
     out = rt._sharded_agg(q, s, np.full((4,), 0.25, np.float32))
     assert out.sharding.spec == specs["dvec"]
+
+
+def test_score_matrix_shardings(round_mesh, adapter):
+    """The sharded score programs' outputs carry the score-matrix
+    PartitionSpecs: the (P, Q) matrix is P-sharded over the data axis
+    until the stage-boundary gather."""
+    mesh = round_mesh(2)
+    specs = score_matrix_pspecs()
+    P = 4
+    params, updates, vx, vy = _score_inputs(adapter, P)
+    sharded = make_sharded_score_matrix_fn(adapter, mesh)
+    scores = sharded(params, updates, vx, vy)
+    assert scores.shape == (P, vx.shape[0])
+    assert scores.sharding.spec == specs["scores"]
+
+    from jax.flatten_util import ravel_pytree
+
+    _, unravel = ravel_pytree(params)
+    stack = jnp.stack(
+        [ravel_pytree(jax.tree.map(lambda x: x[i], updates))[0]
+         for i in range(P)]
+    )
+    int8_sharded = make_sharded_score_from_int8_fn(adapter, mesh, unravel)
+    scores8 = int8_sharded(params, stack, vx, vy)
+    assert scores8.sharding.spec == specs["scores"]
 
 
 def test_shard_ctx_tolerates_data_only_mesh(round_mesh):
