@@ -32,6 +32,7 @@ from benchmarks import (
     consensus_cost,
     fig3_attack_probability,
     fig4_malicious,
+    hier_bench,
     kernel_bench,
     roofline,
     round_bench,
@@ -44,6 +45,7 @@ ALL = {
     "consensus_cost": consensus_cost.run,
     "kernel_bench": kernel_bench.run,
     "round_bench": round_bench.run,
+    "hier_bench": hier_bench.run,
     "storage_opt": storage_opt.run,
     "table1_accuracy": table1_accuracy.run,
     "fig4_malicious": fig4_malicious.run,
@@ -78,12 +80,22 @@ def main() -> None:
         print(f"# {name} took {time.time()-t0:.1f}s")
 
     root = pathlib.Path(__file__).resolve().parent.parent
-    for section, fname in (("kernel_bench", "BENCH_kernels.json"),
-                           ("round_bench", "BENCH_round.json")):
-        if section in sections:
-            out = root / fname
-            out.write_text(json.dumps(sections[section], indent=2) + "\n")
-            print(f"# wrote {out}")
+    if "kernel_bench" in sections:
+        out = root / "BENCH_kernels.json"
+        out.write_text(json.dumps(sections["kernel_bench"], indent=2) + "\n")
+        print(f"# wrote {out}")
+    # BENCH_round.json carries the flat round-loop stage timings AND the
+    # hierarchical-round memory rows: merge whichever sections ran into the
+    # existing snapshot so a --only run of one doesn't drop the other's
+    # rows (renamed rows must be pruned by hand — keys merge, not replace)
+    ran = [s for s in ("round_bench", "hier_bench") if s in sections]
+    if ran:
+        out = root / "BENCH_round.json"
+        data = json.loads(out.read_text()) if out.exists() else {}
+        for section in ran:
+            data.update(sections[section])
+        out.write_text(json.dumps(data, indent=2) + "\n")
+        print(f"# wrote {out}")
     if failures:
         sys.exit(1)
 

@@ -52,6 +52,7 @@ def build_runtime(
     initial_params=None,
     stages: Optional[Dict[str, object]] = None,
     mesh=None,
+    tiers: Optional[int] = None,
 ):
     """Builds the round runtime for a config.
 
@@ -70,8 +71,25 @@ def build_runtime(
     run D-sharded (``top_k_int8_sharded`` / ``fused_int8_sharded``) and
     the fused score-from-int8 validators (``committee_int8`` /
     ``committee_int8_sharded``) become available.  ``stages`` still
-    overrides any stage by name or callable."""
+    overrides any stage by name or callable.
+
+    ``tiers=S`` (S > 1) selects the hierarchical two-tier round engine
+    (``repro.fl.hier``): each round is partitioned into S sub-communities
+    streamed through a slice-sized buffer, with a second-level committee
+    round over the S sub-aggregates before the chain commit — peak
+    update-stack memory is bounded by the largest slice.  A ``validator``
+    entry in ``stages`` selects the tier-1 (per-slice) inner validator;
+    ``tiers=1`` is the flat pipeline, bit-identical to omitting it."""
     cfg = build_config(cfg, baseline=baseline)
+    if tiers is not None:
+        if isinstance(cfg, FLConfig):
+            raise ValueError(
+                "tiers applies to the BFLC committee runtime only — the "
+                "committee-free baselines have no consensus to tier"
+            )
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, tiers=int(tiers))
     if isinstance(cfg, FLConfig):
         return FLTrainer(adapter, dataset, cfg,
                          initial_params=initial_params, stages=stages,

@@ -74,6 +74,17 @@ class CollusionPolicy:
         return honest_score
 
 
+def poison_membership(manager, node_ids) -> None:
+    """Re-point the community's malicious ground truth at exactly the given
+    nodes.  Whole-group collusion scenarios (§V.B's strengthened attack
+    applied to one hierarchical sub-committee: every trainer AND member of
+    a slice colluding) re-mark the compromised set per round with this —
+    everyone else reverts to honest."""
+    target = {int(i) for i in node_ids}
+    for nid, node in manager.nodes.items():
+        node.is_malicious = nid in target
+
+
 ATTACKS = {
     "gaussian": gaussian_perturbation,
     "sign_flip": lambda rng, u, **kw: sign_flip(u, **kw),

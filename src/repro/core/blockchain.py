@@ -2,8 +2,8 @@
 
 Two block kinds on one alliance chain:
 
-* **model block** at height ``t * (k + 1)``   — the round-t global model;
-* **update blocks** at heights ``[t*(k+1)+1, (t+1)*(k+1)-1]`` — the k scored
+* **model block** at height ``t * period``   — the round-t global model;
+* **update blocks** at heights ``[t*period+1, t*period+k]`` — the k scored
   local updates of round t.
 
 The chain enforces this layout: exactly ``k`` update blocks must follow a
@@ -12,6 +12,16 @@ addressable in O(1) (§III.A "nodes can get the latest model quickly").
 Historical blocks exist for failure fallback & verification and can be pruned
 (§IV.D) — pruning keeps headers (so hash-chain verification still works) and
 drops payloads, or hands payloads to an off-chain store.
+
+For hierarchical rounds (paper §V's network-sharding scale-out, built by
+``repro.fl.hier``) a third kind exists: with ``tier2_block=True`` every
+round additionally carries one **committee block** at height
+``t*period + k + 1`` holding the tier-2 committee's decision record
+(members, the S x Q2 score matrix over the sub-aggregates, accept mask).
+The period then becomes ``k + 2``, the k update blocks store the S = k
+sub-committee aggregates, and the committee block is part of the enforced
+layout — a verified tiered chain cannot silently drop the tier-2 audit
+trail.
 
 Hashes are SHA-256 over (prev_hash, header fields, payload digest); payload
 digests cover every leaf of the stored pytree, so a tampered weight flips the
@@ -28,6 +38,7 @@ import numpy as np
 
 MODEL = "model"
 UPDATE = "update"
+COMMITTEE = "committee"
 
 
 def pytree_digest(tree: Any) -> str:
@@ -45,7 +56,7 @@ def pytree_digest(tree: Any) -> str:
 @dataclass
 class Block:
     index: int
-    kind: str                   # MODEL | UPDATE
+    kind: str                   # MODEL | UPDATE | COMMITTEE
     round: int
     prev_hash: str
     payload_digest: str
@@ -82,10 +93,15 @@ class Chain:
     """The alliance-chain ledger for one BFLC training community."""
 
     def __init__(self, k_updates_per_round: int, off_chain_store=None,
-                 update_codec=None):
+                 update_codec=None, tier2_block: bool = False):
         if k_updates_per_round < 1:
             raise ValueError("k must be >= 1")
         self.k = k_updates_per_round
+        # tiered rounds (repro.fl.hier): one committee block per round,
+        # appended after the k sub-aggregate update blocks and before the
+        # next model block — the layout makes the tier-2 audit trail
+        # mandatory, not advisory
+        self.tier2 = bool(tier2_block)
         self.blocks: List[Block] = []
         self._latest_model_idx: int = -1   # O(1) latest-model pointer
         self._latest_model_round: int = -1
@@ -99,11 +115,23 @@ class Chain:
     # ------------------------------------------------------------------
     # layout arithmetic (paper §III.A)
     # ------------------------------------------------------------------
+    @property
+    def period(self) -> int:
+        """Blocks per round: model + k updates (+ the tier-2 committee
+        block on tiered chains)."""
+        return self.k + 1 + (1 if self.tier2 else 0)
+
     def model_index(self, t: int) -> int:
-        return t * (self.k + 1)
+        return t * self.period
 
     def update_index_range(self, t: int) -> Tuple[int, int]:
-        return t * (self.k + 1) + 1, (t + 1) * (self.k + 1) - 1
+        return t * self.period + 1, t * self.period + self.k
+
+    def committee_index(self, t: int) -> int:
+        if not self.tier2:
+            raise LayoutError("flat chain has no committee blocks "
+                              "(construct with tier2_block=True)")
+        return t * self.period + self.k + 1
 
     @property
     def height(self) -> int:
@@ -193,8 +221,44 @@ class Chain:
             )
         )
 
+    def append_committee(self, record: Any) -> Block:
+        """Append the round's tier-2 committee block (tiered chains only).
+
+        ``record`` is the committee's decision payload — members, the
+        (S, Q2) sub-aggregate score matrix, accept mask.  It is stored
+        verbatim (never codec-encoded: it is consensus metadata, not a
+        model update) at the enforced height between the round's last
+        update block and the next model block."""
+        if self._latest_model_idx < 0:
+            raise LayoutError("no genesis model block yet")
+        t = self._latest_model_round
+        expect = self.committee_index(t)       # raises on flat chains
+        if self.height != expect:
+            raise LayoutError(
+                f"committee block for round {t} must sit at height {expect} "
+                f"(after {self.k} update blocks), chain height is "
+                f"{self.height}"
+            )
+        digest = pytree_digest(record)
+        payload = record
+        if self.store is not None:
+            self.store.put(digest, record)
+            payload = None
+        return self._append(
+            Block(
+                index=self.height,
+                kind=COMMITTEE,
+                round=t,
+                prev_hash="",
+                payload_digest=digest,
+                payload=payload,
+            )
+        )
+
     def updates_this_round(self) -> int:
-        return self.height - 1 - self._latest_model_idx
+        # clamp: on tiered chains the committee block also sits above the
+        # latest model block but is not an update
+        return min(self.height - 1 - self._latest_model_idx, self.k)
 
     def round_complete(self) -> bool:
         return self.updates_this_round() >= self.k
@@ -240,6 +304,13 @@ class Chain:
             for b in self.updates_at_round(t)
         ]
 
+    def committee_at_round(self, t: int) -> Any:
+        """The round-t tier-2 committee decision record (tiered chains)."""
+        idx = self.committee_index(t)
+        if idx >= self.height:
+            raise LayoutError(f"round {t} has no committee block yet")
+        return self._payload(self.blocks[idx])
+
     # ------------------------------------------------------------------
     # integrity + storage optimization
     # ------------------------------------------------------------------
@@ -250,10 +321,13 @@ class Chain:
                 return False
             if blk.payload is not None and pytree_digest(blk.payload) != blk.payload_digest:
                 return False
-            # layout check
-            if blk.kind == MODEL and blk.index % (self.k + 1) != 0:
-                return False
-            if blk.kind == UPDATE and blk.index % (self.k + 1) == 0:
+            # layout check: position within the round's period decides the
+            # only kind allowed there
+            pos = blk.index % self.period
+            want = (MODEL if pos == 0
+                    else UPDATE if pos <= self.k
+                    else COMMITTEE)
+            if blk.kind != want:
                 return False
             prev = blk.hash
         return True

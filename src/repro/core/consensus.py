@@ -120,3 +120,16 @@ def consensus_cost(num_trainers: int, committee_size: int) -> Tuple[int, int]:
     """Returns (ccm_cost, broadcast_cost) = (P*Q, (P+Q)^2)  — paper §V.A."""
     P, Q = num_trainers, committee_size
     return P * Q, (P + Q) ** 2
+
+
+def consensus_cost_tiered(num_trainers: int, tiers: int,
+                          sub_committee_size: int,
+                          committee_size: int) -> int:
+    """Validation-message cost of a two-tier round (§V's network sharding).
+
+    Each of the P trainers is validated by its slice's sub-committee of q
+    members (P*q total across the S slices), then the S sub-aggregates are
+    validated by the tier-2 committee of Q members — so the flat P*Q term
+    drops to P*q + S*Q, with q fixed by the slice size rather than growing
+    with the community."""
+    return num_trainers * sub_committee_size + tiers * committee_size

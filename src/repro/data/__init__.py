@@ -1,9 +1,11 @@
 from repro.data.synthetic import FederatedDataset, make_femnist_like
 from repro.data.partition import dirichlet_partition, leaf_style_partition
+from repro.data.virtual import VirtualFederatedDataset
 
 __all__ = [
     "FederatedDataset",
     "make_femnist_like",
     "dirichlet_partition",
     "leaf_style_partition",
+    "VirtualFederatedDataset",
 ]

@@ -133,7 +133,7 @@ def make_sharded_score_matrix_fn(adapter: ModelAdapter, mesh, axis: str = "data"
 
 
 def _int8_score_program(adapter: ModelAdapter, unravel, interpret: bool):
-    """Unjitted (params, stack, val_x, val_y) -> (rows, Q) from the int8 view.
+    """Unjitted (params, stack, vx, vy) -> ((rows, Q) scores, q, scales).
 
     ``stack``: (rows, D) f32 flattened updates.  Each row is quantized with
     the chain codec's tiling (so the committee scores exactly the int8 blob
@@ -141,7 +141,10 @@ def _int8_score_program(adapter: ModelAdapter, unravel, interpret: bool):
     candidate in one read — int8 row dequantized in-register and the delta
     applied during the base-parameter load — so the f32 (rows, D) candidate
     stack is materialized once, not twice (PR 1's fused-aggregation trick
-    applied to validation)."""
+    applied to validation).  The per-row ``(q, scales)`` come back with the
+    scores: they ARE the chain blobs a quantizing packer would store, so
+    the validator caches them on the RoundContext and the packer never
+    re-quantizes (carried ROADMAP follow-up)."""
     from jax.flatten_util import ravel_pytree
 
     from repro.kernels.fused_score import make_fused_candidates_fn
@@ -164,14 +167,32 @@ def _int8_score_program(adapter: ModelAdapter, unravel, interpret: bool):
                 candidate, vx, vy
             )
 
-        return jax.vmap(one_candidate, in_axes=(0, None, None))(cands, vx, vy)
+        scores = jax.vmap(one_candidate, in_axes=(0, None, None))(
+            cands, vx, vy
+        )
+        return scores, q, s
 
     return score
 
 
+def flatten_stacked_updates(stacked):
+    """In-program flatten of a P-stacked update pytree -> (P, D) f32.
+
+    ``jax.tree.leaves`` order matches ``ravel_pytree`` (both walk the same
+    treedef) and per-leaf ``reshape(P, -1)`` matches per-row C-order ravel,
+    so row i equals ``ravel_pytree(update_i)`` bit-for-bit — the int8
+    scorer can consume the trainer's device-resident ``ctx.cohort_stacked``
+    without the host-side flatten round-trip (carried ROADMAP follow-up)."""
+    leaves = jax.tree.leaves(stacked)
+    return jnp.concatenate(
+        [l.reshape(l.shape[0], -1).astype(jnp.float32) for l in leaves],
+        axis=1,
+    )
+
+
 def make_score_from_int8_fn(adapter: ModelAdapter, unravel):
     """Single-device fused int8 scorer: (params, (P, D) stack, vx, vy) ->
-    (P, Q) accuracies of the quantized candidates (chain-codec view)."""
+    ((P, Q) accuracies of the quantized candidates, per-row q, scales)."""
     from repro.kernels.ops import _interpret
 
     return jax.jit(_int8_score_program(adapter, unravel, _interpret()))
@@ -180,20 +201,28 @@ def make_score_from_int8_fn(adapter: ModelAdapter, unravel):
 def make_sharded_score_from_int8_fn(adapter: ModelAdapter, mesh, unravel,
                                     axis: str = "data"):
     """The fused int8 scorer shard_mapped over the mesh's data axis: each
-    device quantizes and scores its own P-shard of update rows (rows are
-    tile-local, so per-row blobs — and therefore scores — are bitwise
-    identical to the single-device int8 scorer); only the (P, Q) score
-    matrix is gathered.  The caller pads P to a multiple of the axis
+    device flattens + quantizes + scores its own P-shard of the stacked
+    update pytree (rows are tile-local, so per-row blobs — and therefore
+    scores — are bitwise identical to the single-device int8 scorer); the
+    (P, Q) score matrix and the P-sharded (q, scales) rows are gathered at
+    the stage boundary.  Takes the trainer's stacked update pytree
+    directly (``ctx.cohort_stacked`` stays device-resident, P-sharded on
+    this mesh, zero relayout); the caller pads P to a multiple of the axis
     size."""
     from jax.sharding import PartitionSpec as P
 
     from repro.kernels.ops import _interpret
     from repro.shard_compat import shard_map
 
+    program = _int8_score_program(adapter, unravel, _interpret())
+
+    def score(params, stacked, vx, vy):
+        return program(params, flatten_stacked_updates(stacked), vx, vy)
+
     return jax.jit(shard_map(
-        _int8_score_program(adapter, unravel, _interpret()), mesh=mesh,
+        score, mesh=mesh,
         in_specs=(P(), P(axis), P(), P()),
-        out_specs=P(axis),
+        out_specs=(P(axis), P(axis), P(axis)),
     ))
 
 

@@ -100,6 +100,13 @@ class RoundContext:
     sharded_score_fn: Any = None           # P-sharded score-matrix program
     int8_score_fn: Any = None              # fused int8 scorer (single device)
     sharded_int8_score_fn: Any = None      # P-sharded fused int8 scorer
+    # hierarchical (two-tier) round state — HierState, built per round by
+    # the runtime when cfg.tiers > 1 (see repro.fl.hier)
+    hier: Any = None
+    # uploader -> (q, scales, row, d): the int8 validators' per-row
+    # chain-codec quantization, cached so the packer reuses the rows
+    # instead of re-quantizing the packed stack
+    row_quant: Dict[int, Any] = field(default_factory=dict)
     # per-cohort state (overwritten each cohort)
     cohort: int = 0
     trainers: List[int] = field(default_factory=list)
@@ -494,6 +501,33 @@ class CommitteeValidator:
 register("validator", "committee")(CommitteeValidator())
 
 
+def cache_row_quant(ctx: RoundContext, q, s, d: int) -> None:
+    """Record the cohort's per-row chain-codec quantization on the context.
+
+    ``q``/``s`` are the int8 scorer's (rows, Dpad) / (rows, nblk) arrays —
+    the rows the committee just scored ARE the blobs a quantizing packer
+    would store (identical tiling), so the packer stacks the cached rows
+    instead of re-quantizing the packed updates.  Entries hold (array,
+    array, row, d) references; the k packed rows are sliced at pack time."""
+    for i, uploader in enumerate(ctx.trainers):
+        ctx.row_quant[uploader] = (q, s, i, d)
+
+
+def cached_row_stack(ctx: RoundContext, ids: Optional[List[int]] = None):
+    """(q, s, d) stacked from the row-quant cache for the given uploaders
+    (default: the packed set), or None when any row is missing (e.g. the
+    default f32 validator ran — nothing was quantized yet, so there is
+    nothing to reuse)."""
+    ids = ctx.packed_ids if ids is None else ids
+    cache = ctx.row_quant
+    if not cache or any(u not in cache for u in ids):
+        return None
+    entries = [cache[u] for u in ids]
+    q = jnp.stack([e[0][e[2]] for e in entries])
+    s = jnp.stack([e[1][e[2]] for e in entries])
+    return q, s, entries[0][3]
+
+
 class Int8CommitteeValidator(CommitteeValidator):
     """Committee scoring straight from the chain-codec int8 view of each
     update (opt-in: ``stages={"validator": "committee_int8"}``): the fused
@@ -511,9 +545,11 @@ class Int8CommitteeValidator(CommitteeValidator):
                 "chain codec's unravel structure)"
             )
         stack, _ = flatten_updates(ctx.cohort_updates)
-        return np.asarray(
-            ctx.int8_score_fn(ctx.params, stack, ctx.val_x, ctx.val_y)
+        scores, q, s = ctx.int8_score_fn(
+            ctx.params, stack, ctx.val_x, ctx.val_y
         )
+        cache_row_quant(ctx, q, s, int(stack.shape[1]))
+        return np.asarray(scores)
 
 
 register("validator", "committee_int8")(Int8CommitteeValidator())
@@ -574,12 +610,19 @@ def pack_top_k_int8(ctx: RoundContext) -> None:
     """Quantized chain packing (paper §IV.D): flatten the packed cohort
     once, quantize the whole (K, D) stack in one kernel launch, store
     int8 blobs as update blocks, and hand the quantized stack to the
-    fused aggregator — the f32 stack never hits HBM."""
+    fused aggregator — the f32 stack never hits HBM.  When an int8
+    validator already quantized the round's rows, the cached rows are
+    stacked instead (identical tiling — nothing is re-quantized)."""
     from repro.kernels.ops import quantize_stack
 
     _set_packed(ctx, _select_top_k(ctx))
-    stack, unravel = flatten_updates(ctx.packed_updates)
-    q, s, d = quantize_stack(stack)
+    cached = cached_row_stack(ctx)
+    if cached is not None:
+        q, s, d = cached
+        unravel = ctx.chain.codec.unravel
+    else:
+        stack, unravel = flatten_updates(ctx.packed_updates)
+        q, s, d = quantize_stack(stack)
     for i, (u, sc) in enumerate(zip(ctx.packed_ids, ctx.packed_scores)):
         ctx.chain.append_update(
             {"q": q[i], "scales": s[i], "d": d}, u, sc, encoded=True

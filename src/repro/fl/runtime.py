@@ -69,6 +69,13 @@ class BFLCConfig:
     # from the quantized chain representation via the fused Pallas pass —
     # one int8 read of the stack, no f32 (K, D) materialization.
     quantize_chain: bool = False
+    # hierarchical rounds (paper §V scale-out, repro.fl.hier): tiers = S > 1
+    # splits every round into S sub-communities, each running committee
+    # consensus + aggregation on its own slice, with a second-level
+    # committee round over the S sub-aggregates before the chain commit.
+    # Peak update-stack memory is bounded by the largest slice, not O(P·D).
+    # tiers = 1 is the flat pipeline, bit-identical to not setting it.
+    tiers: int = 1
     malicious_fraction: float = 0.0
     attack: str = "gaussian"
     attack_sigma: float = 1.0
@@ -114,15 +121,21 @@ class BFLCRuntime:
                 "quantize_chain=True requires use_kernels=True "
                 "(aggregation runs the fused Pallas int8 path)"
             )
+        if cfg.tiers < 1:
+            raise ValueError(f"tiers={cfg.tiers} must be >= 1")
+        # a tiered round's final aggregation runs over S = tiers blocks,
+        # a flat round's over k_updates — validate the trim against the
+        # stack the aggregator will actually see
+        agg_rows = cfg.tiers if cfg.tiers > 1 else cfg.k_updates
         if cfg.aggregation == "trimmed_mean" and not (
-            0 <= 2 * cfg.trim < cfg.k_updates
+            0 <= 2 * cfg.trim < agg_rows
         ):
             # validate up front: by round time the update blocks are already
             # on the chain, and a failed aggregation would strand the round
             # mid-layout
             raise ValueError(
-                f"trim={cfg.trim} invalid for k_updates={cfg.k_updates} "
-                f"(need 0 <= 2*trim < k_updates)"
+                f"trim={cfg.trim} invalid for {agg_rows} aggregated rows "
+                f"(need 0 <= 2*trim < rows)"
             )
         self.adapter = adapter
         self.data = dataset
@@ -152,8 +165,18 @@ class BFLCRuntime:
             from repro.kernels.ops import Int8UpdateCodec
 
             self._codec = Int8UpdateCodec(params)
-        self.chain = Chain(cfg.k_updates, update_codec=self._codec)
+        # tiered rounds store S sub-aggregate update blocks + one tier-2
+        # committee block per round (repro.fl.hier / core.blockchain)
+        tiered = cfg.tiers > 1
+        self.chain = Chain(cfg.tiers if tiered else cfg.k_updates,
+                           update_codec=self._codec, tier2_block=tiered)
         self.chain.append_model(params, 0)
+        if self._codec is not None:
+            self._dim = self._codec.dim
+        else:
+            from jax.flatten_util import ravel_pytree
+
+            self._dim = int(ravel_pytree(params)[0].shape[0])
 
         # jitted batched helpers
         self._local_train = make_local_train_fn(adapter, cfg.local_lr, cfg.momentum)
@@ -231,9 +254,22 @@ class BFLCRuntime:
                             replace=False).tolist()
         )
         self._fill_committee()
-        self.pipeline = build_pipeline(default_stage_names(cfg, mesh), stages)
+        self._hier_inner = None
+        if tiered:
+            from repro.fl.hier import build_hier_pipeline
+
+            self.pipeline, self._hier_inner = build_hier_pipeline(
+                cfg, mesh, stages
+            )
+        else:
+            self.pipeline = build_pipeline(
+                default_stage_names(cfg, mesh), stages
+            )
         self.logs: List[RoundLog] = []
         self.stage_timings: List[Dict[str, float]] = []
+        # per-round hier memory accounting (tiers > 1): dicts with
+        # peak_stack_bytes / flat_stack_bytes / tiers / max_slice_rows
+        self.hier_logs: List[Dict[str, int]] = []
 
     def _fill_committee(self):
         """Keep committee size exactly q_committee (see pipeline.fill_committee)."""
@@ -277,8 +313,22 @@ class BFLCRuntime:
             int8_score_fn=self._int8_score,
             sharded_int8_score_fn=self._sharded_int8_score,
         )
+        if self.cfg.tiers > 1:
+            from repro.fl.hier import HierState
+
+            ctx.hier = HierState(tiers=self.cfg.tiers,
+                                 inner_validator=self._hier_inner,
+                                 dim=self._dim)
         self.pipeline.run(ctx)
         self.committee = ctx.committee
+        if ctx.hier is not None:
+            self.hier_logs.append({
+                "tiers": ctx.hier.tiers,
+                "peak_stack_bytes": ctx.hier.peak_stack_bytes,
+                "flat_stack_bytes": ctx.hier.flat_stack_bytes,
+                "max_slice_rows": ctx.hier.max_slice_rows,
+                "t1_validations": ctx.hier.t1_validations,
+            })
 
         mal_nodes = {i for i, nd in self.manager.nodes.items() if nd.is_malicious}
         log = RoundLog(

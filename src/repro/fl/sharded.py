@@ -30,10 +30,13 @@ edits to the round loop:
   boundary-materialization rule.  Scores are bitwise identical to the
   single-device oracle — same per-candidate XLA program, just sharded.
 * ``validator = "committee_int8_sharded"`` (opt-in) — same sharding, but
-  each device quantizes its update rows with the chain codec and rebuilds
+  each device flattens its P-shard of the trainer's device-resident update
+  stack in-program, quantizes the rows with the chain codec and rebuilds
   candidates via the fused score-from-int8 Pallas pass
   (``repro.kernels.fused_score``): the committee scores exactly the blob a
   quantizing packer would store, within int8 tolerance of the f32 scores.
+  The per-row (q, scales) are cached on the context so the packer reuses
+  them instead of re-quantizing.
 
 The stages read their pre-built programs from ``RoundContext``
 (``sharded_train_fn`` / ``sharded_quantize_fn`` / ``sharded_agg_fn`` /
@@ -59,6 +62,8 @@ from repro.fl.pipeline import (
     _commit_aggregate,
     _stack,
     _unstack,
+    cache_row_quant,
+    cached_row_stack,
     poison_cohort_updates,
     register,
     sample_cohort_batches,
@@ -123,17 +128,44 @@ def train_local_sgd_sharded(ctx: RoundContext) -> None:
     ctx.cohort_updates = updates
 
 
+def _pad_cached_to_shards(q, s, d: int, ndev: int):
+    """Widen cached rows from the single-device width ``padded_dim(d)`` to
+    the sharded width ``padded_dim_sharded(d, ndev)``.  The extra tiles
+    are all-zero and the quantize kernel maps an all-zero tile to q=0 /
+    scale=1.0, so appending exactly that is bitwise identical to
+    quantizing the wider stack."""
+    from repro.kernels.ops import padded_dim_sharded
+    from repro.kernels.tiling import BLOCK_D
+
+    pad = padded_dim_sharded(d, ndev) - q.shape[1]
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad)))
+        s = jnp.pad(s, ((0, 0), (0, pad // BLOCK_D)),
+                    constant_values=1.0)
+    return q, s
+
+
 @register("packer", "top_k_int8_sharded")
 def pack_top_k_int8_sharded(ctx: RoundContext) -> None:
     """Sharding-aware quantized packing: flatten the packed cohort once,
     quantize each device's D-shard of the (K, D) stack in parallel, store
     int8 blobs as update blocks, hand the (sharded) int8 stack to the
-    sharded aggregator."""
+    sharded aggregator.  Rows already quantized by an int8 validator are
+    reused from the row-quant cache (zero-padded to the shard boundary)
+    instead of re-quantized."""
     quantize_fn = _require(ctx, "sharded_quantize_fn", "top_k_int8_sharded")
+    mesh = _require(ctx, "mesh", "top_k_int8_sharded")
+    ndev = dict(mesh.shape).get("data", mesh.devices.size)
     _set_packed(ctx, _select_top_k(ctx))
-    stack, unravel = flatten_updates(ctx.packed_updates)
-    d = stack.shape[1]
-    q, s = quantize_fn(stack)
+    cached = cached_row_stack(ctx)
+    if cached is not None:
+        q, s, d = cached
+        q, s = _pad_cached_to_shards(q, s, d, ndev)
+        unravel = ctx.chain.codec.unravel
+    else:
+        stack, unravel = flatten_updates(ctx.packed_updates)
+        d = stack.shape[1]
+        q, s = quantize_fn(stack)
     # one gather for the whole stack: slicing rows of the D-sharded arrays
     # inside the loop would pay a cross-device gather + host transfer per
     # blob (the digest reads the bytes anyway); the aggregator still gets
@@ -187,11 +219,21 @@ class Int8ShardedCommitteeValidator(CommitteeValidator):
         )
         mesh = _require(ctx, "mesh", "committee_int8_sharded")
         ndev = dict(mesh.shape).get("data", mesh.devices.size)
-        stack, _ = flatten_updates(ctx.cohort_updates)
-        n = stack.shape[0]
-        scores = score_fn(
-            ctx.params, _pad_rows(stack, n, ndev), ctx.val_x, ctx.val_y
+        n = len(ctx.cohort_updates)
+        if ctx.cohort_stacked is not None and not ctx.cohort_poisoned:
+            # the trainer's device-resident stack is still bit-identical
+            # to the host-side update list AND already P-sharded on this
+            # mesh: the scorer flattens it in-program — no host flatten,
+            # no relayout
+            stacked = ctx.cohort_stacked
+        else:
+            stacked = _pad_rows(_stack(ctx.cohort_updates), n, ndev)
+        scores, q, s = score_fn(
+            ctx.params, stacked, ctx.val_x, ctx.val_y
         )
+        d = int(sum(np.prod(l.shape[1:])
+                    for l in jax.tree.leaves(stacked)))
+        cache_row_quant(ctx, q, s, d)
         return np.asarray(scores)[:n]
 
 

@@ -93,6 +93,79 @@ def _accept_all_packed_malicious_rate(ds, adapter, warm, attack: str) -> float:
 GATES = {"gaussian": 0.2, "sign_flip": 0.2, "scaled": 0.25}
 
 
+# ----------------------------------------------------------------------
+# hierarchical rounds: a fully colluding sub-committee (§V.B strengthened
+# attack applied to one tier-1 slice) must be caught at tier 2
+# ----------------------------------------------------------------------
+HIER_TIERS = 2
+HIER_ROUNDS = 5
+# 24 clients, everyone active, q_committee = 4 -> pool of 20, 2 slices of
+# 10 (3-member sub-committee + 7 trainers each).  sigma = 6: averaging the
+# slice's 7 iid noise updates divides the applied magnitude by ~sqrt(7),
+# so per-update noise must be well above the flat gates' sigma = 2 for the
+# *sub-aggregate* to be a real poison (the flat gates score updates
+# individually; tier 2 scores the slice mean)
+HIER_CFG = dict(active_proportion=1.0, committee_fraction=1 / 6,
+                k_updates=4, local_steps=20, local_batch=32, local_lr=0.05,
+                collusion=True, malicious_fraction=0.0, attack="gaussian",
+                attack_sigma=6.0, seed=1)
+
+
+def _colluding_slice_runtime(ds, adapter, warm):
+    """Tiered runtime where slice 0 is wholly compromised every round:
+    all its trainers poison their updates AND its whole sub-committee
+    colludes (CollusionPolicy high scores), so the poisoned sub-aggregate
+    sails through its own tier-1 vote — the scenario only tier-2
+    filtering can catch."""
+    from repro.core.attacks import poison_membership
+    from repro.fl.hier import sample_tiered
+
+    def colluding_sampler(ctx):
+        sample_tiered(ctx)
+        if ctx.cohort == 0:
+            sl = ctx.hier.slices[0]
+            poison_membership(ctx.manager,
+                              list(sl.trainers) + list(sl.committee))
+
+    return build_runtime(adapter, ds, dict(HIER_CFG), tiers=HIER_TIERS,
+                         initial_params=warm,
+                         stages={"sampler": colluding_sampler})
+
+
+@pytest.mark.slow
+def test_colluding_sub_committee_caught_at_tier2(ds, adapter, warm_params):
+    rt = _colluding_slice_runtime(ds, adapter, warm_params)
+    logs = rt.run(HIER_ROUNDS, eval_every=HIER_ROUNDS + 1)
+    assert rt.chain.verify()
+
+    # the compromised slice's rep IS malicious and DID pass tier 1 (its
+    # colluding sub-committee accepted it): the final round's marking is
+    # still live, so the attack demonstrably presented a poisoned
+    # sub-aggregate to tier 2
+    mal = {i for i, nd in rt.manager.nodes.items() if nd.is_malicious}
+    assert mal, "poison_membership never ran"
+    last = rt.chain.committee_at_round(HIER_ROUNDS - 1)
+    assert any(int(u) in mal for u in last["uploaders"])
+
+    later = logs[1:]
+    slots = HIER_TIERS * len(later)
+    hier_rate = sum(l.packed_malicious for l in later) / slots
+    # a tier-2-free hierarchy packs the poisoned sub-aggregate every
+    # round: rate 1/S.  accept_all semantics pack malicious at the
+    # participation rate (half the trainers).  The tier-2 committee must
+    # keep the poisoned sub-aggregate out of the packed set.
+    no_tier2_rate = 1.0 / HIER_TIERS
+    assert hier_rate < no_tier2_rate / 2, (hier_rate, no_tier2_rate)
+    assert hier_rate <= 0.2, hier_rate
+    # and the chain records the rejection: the compromised slice's
+    # sub-aggregate is marked not-accepted in the tier-2 audit block
+    rejected_rounds = sum(
+        1 for t in range(1, HIER_ROUNDS)
+        if not all(rt.chain.committee_at_round(t)["accepted"])
+    )
+    assert rejected_rounds >= (HIER_ROUNDS - 1) // 2, rejected_rounds
+
+
 @pytest.mark.slow
 @pytest.mark.parametrize("attack", sorted(ATTACKS))
 def test_committee_filters_attack_but_accept_all_does_not(

@@ -137,6 +137,107 @@ def test_property_chain_invariants(k, rounds):
             assert blk.index % (k + 1) == 0
 
 
+# ----------------------------------------------------------------------
+# tiered chains (repro.fl.hier): committee block in the enforced layout
+# ----------------------------------------------------------------------
+def committee_record(s=2, q=3):
+    return {"members": np.arange(q), "scores": np.zeros((s, q), np.float32),
+            "accepted": np.ones(s, bool)}
+
+
+def run_tiered_rounds(chain: Chain, rounds: int):
+    for t in range(rounds):
+        for i in range(chain.k):
+            chain.append_update(update(i), uploader=i, score=0.5)
+        chain.append_committee(committee_record(s=chain.k))
+        chain.append_model(model(t + 1), t + 1)
+
+
+def test_tiered_layout_formula():
+    chain = Chain(2, tier2_block=True)
+    assert chain.period == 4
+    chain.append_model(model(), 0)
+    run_tiered_rounds(chain, 2)
+    assert chain.verify()
+    assert chain.height == 2 * 4 + 1
+    for t in range(2):
+        assert chain.blocks[chain.model_index(t)].kind == "model"
+        assert chain.blocks[chain.committee_index(t)].kind == "committee"
+        assert chain.committee_index(t) == chain.update_index_range(t)[1] + 1
+        rec = chain.committee_at_round(t)
+        assert rec["scores"].shape == (2, 3)
+    assert chain.latest_model()[0] == 2
+
+
+def test_flat_chain_has_no_committee_blocks():
+    chain = Chain(2)
+    chain.append_model(model(), 0)
+    with pytest.raises(LayoutError, match="flat chain"):
+        chain.committee_index(0)
+    with pytest.raises(LayoutError):
+        chain.append_committee(committee_record())
+
+
+def test_tiered_committee_block_is_mandatory():
+    chain = Chain(2, tier2_block=True)
+    chain.append_model(model(), 0)
+    chain.append_update(update(), 0, 0.5)
+    # too early: an update slot is still open
+    with pytest.raises(LayoutError):
+        chain.append_committee(committee_record())
+    chain.append_update(update(), 1, 0.5)
+    # model before the committee block: the audit trail can't be skipped
+    with pytest.raises(LayoutError):
+        chain.append_model(model(1), 1)
+    chain.append_committee(committee_record())
+    with pytest.raises(LayoutError):     # exactly one committee block
+        chain.append_committee(committee_record())
+    chain.append_model(model(1), 1)
+    assert chain.verify()
+
+
+def test_tiered_verify_detects_committee_tamper():
+    chain = Chain(2, tier2_block=True)
+    chain.append_model(model(), 0)
+    run_tiered_rounds(chain, 1)
+    assert chain.verify()
+    chain.blocks[3].payload = committee_record(s=2, q=4)
+    assert not chain.verify()
+
+
+def test_tiered_committee_never_codec_encoded():
+    class _BoomCodec:
+        def encode(self, tree):
+            raise AssertionError("committee records must not hit the codec")
+
+        def decode(self, blob):
+            return blob
+
+    chain = Chain(1, update_codec=_BoomCodec(), tier2_block=True)
+    chain.append_model(model(), 0)
+    chain.append_update(update(), 0, 0.5, encoded=True)
+    blk = chain.append_committee(committee_record(s=1))
+    assert not blk.encoded
+    np.testing.assert_array_equal(
+        chain.committee_at_round(0)["accepted"], committee_record(1)["accepted"]
+    )
+
+
+@given(k=st.integers(1, 5), rounds=st.integers(0, 5))
+@settings(max_examples=20, deadline=None)
+def test_property_tiered_chain_invariants(k, rounds):
+    chain = Chain(k, tier2_block=True)
+    chain.append_model(model(), 0)
+    run_tiered_rounds(chain, rounds)
+    assert chain.verify()
+    assert chain.height == rounds * (k + 2) + 1
+    assert chain.latest_model()[0] == rounds
+    for blk in chain.blocks:
+        pos = blk.index % chain.period
+        assert blk.kind == ("model" if pos == 0
+                            else "update" if pos <= k else "committee")
+
+
 def test_digest_sensitivity():
     a = model(1.0)
     b = model(1.0)

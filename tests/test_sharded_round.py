@@ -147,7 +147,11 @@ def test_int8_score_matrix_parity(round_mesh, adapter, ndev):
     """The fused score-from-int8 path: bitwise identical across device
     counts (row-local tiles), bitwise identical to the staged
     dequantize-then-score oracle, and tolerance-bounded against the f32
-    scores (int8 quantization noise only)."""
+    scores (int8 quantization noise only).  The scorers also return the
+    per-row (q, scales) — the chain blobs the packers reuse — and the
+    sharded variant consumes the stacked update pytree in-program
+    (``flatten_stacked_updates``), so both paths must agree bitwise on
+    rows too."""
     from jax.flatten_util import ravel_pytree
 
     from repro.kernels import ops
@@ -163,9 +167,14 @@ def test_int8_score_matrix_parity(round_mesh, adapter, ndev):
 
     single = make_score_from_int8_fn(adapter, unravel)
     sharded = make_sharded_score_from_int8_fn(adapter, mesh, unravel)
-    want = np.asarray(single(params, stack, vx, vy))
-    got = np.asarray(sharded(params, stack, vx, vy))
-    np.testing.assert_array_equal(got, want)
+    want, q1, s1 = single(params, stack, vx, vy)
+    want = np.asarray(want)
+    # sharded scorer takes the trainer's stacked pytree, not a flat stack
+    got, qn, sn = sharded(params, updates, vx, vy)
+    np.testing.assert_array_equal(np.asarray(got), want)
+    # per-row quantization is row-local: identical blobs on every ndev
+    np.testing.assert_array_equal(np.asarray(qn), np.asarray(q1))
+    np.testing.assert_array_equal(np.asarray(sn), np.asarray(s1))
 
     # staged oracle: quantize rows, dequantize to f32, score with the f32
     # program — the fused kernel performs the same ops in one pass (an fma
@@ -229,6 +238,41 @@ def test_int8_round_parity(round_mesh, ds, adapter, ndev):
     assert all(b.encoded for b in rtn.chain.updates_at_round(0))
 
 
+# ----------------------------------------------------------------------
+# row-quant cache: packers reuse the validator's per-row (q, scales)
+# ----------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.parametrize("sharded", (False, True))
+def test_row_quant_cache_parity(round_mesh, ds, adapter, sharded):
+    """With an int8-view validator the packer consumes the cached per-row
+    (q, scales) instead of re-quantizing; dropping the cache (forcing the
+    re-quantize path) must not change a single chain bit — the cached rows
+    ARE the blobs the packer would have produced."""
+    from repro.fl.pipeline import resolve
+
+    q_cfg = dict(CFG, quantize_chain=True, use_kernels=True)
+    mesh = round_mesh(2) if sharded else None
+    validator = "committee_int8_sharded" if sharded else "committee_int8"
+    packer_name = "top_k_int8_sharded" if sharded else "top_k_int8"
+    packer = resolve("packer", packer_name)
+
+    def no_cache_packer(ctx):
+        ctx.row_quant.clear()
+        packer(ctx)
+
+    rt_cache = build_runtime(adapter, ds, dict(q_cfg), mesh=mesh,
+                             stages={"validator": validator})
+    rt_nocache = build_runtime(adapter, ds, dict(q_cfg), mesh=mesh,
+                               stages={"validator": validator,
+                                       "packer": no_cache_packer})
+    logs_c = rt_cache.run(2, eval_every=2)
+    logs_n = rt_nocache.run(2, eval_every=2)
+    assert _chain_fingerprint(rt_cache.chain) == \
+        _chain_fingerprint(rt_nocache.chain)
+    assert logs_c == logs_n
+    assert rt_cache.chain.verify()
+
+
 @pytest.mark.parametrize("ndev", (2, 8))
 def test_baseline_sharded_parity(round_mesh, ds, adapter, ndev):
     """FLTrainer (Basic FL / CwMed) with a mesh: the committee-free
@@ -284,13 +328,11 @@ def test_score_matrix_shardings(round_mesh, adapter):
     from jax.flatten_util import ravel_pytree
 
     _, unravel = ravel_pytree(params)
-    stack = jnp.stack(
-        [ravel_pytree(jax.tree.map(lambda x: x[i], updates))[0]
-         for i in range(P)]
-    )
     int8_sharded = make_sharded_score_from_int8_fn(adapter, mesh, unravel)
-    scores8 = int8_sharded(params, stack, vx, vy)
+    scores8, q8, s8 = int8_sharded(params, updates, vx, vy)
     assert scores8.sharding.spec == specs["scores"]
+    # the cached rows come back P-sharded alongside the scores
+    assert q8.shape[0] == s8.shape[0] == P
 
 
 def test_shard_ctx_tolerates_data_only_mesh(round_mesh):
