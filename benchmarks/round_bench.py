@@ -160,6 +160,35 @@ def run(full: bool = False, rounds: int | None = None, smoke: bool = False):
                       _stage_bytes(rt, quantized=True))
         assert rt.chain.verify()
 
+        # async schedule over the same sharded stage set: cohort t+1's
+        # shard_mapped training overlaps cohort t's committee work, so
+        # the async total should approach the train bucket alone (the
+        # buckets are host-attributed — overlapped device time lands in
+        # whichever bucket blocked on it, and their sum stays the wall
+        # clock of the round)
+        rt = build_runtime(adapter, ds, dict(int8),
+                           mesh=make_round_mesh(ndev), schedule="async")
+        timings = _steady_timings(rt, rounds)
+        _emit_variant(f"async_dev{ndev}", timings,
+                      _stage_bytes(rt, quantized=True))
+        assert rt.chain.verify()
+
+    # hierarchical rounds under both schedules: the tiered sampler is
+    # prefetch_safe, so the async engine pipelines the slices — slice
+    # s+1 trains while slice s runs committee consensus + sub-aggregation
+    # (smoke's community is too small to tier: 2 slices can't both seat
+    # a 3-member sub-committee over its active set)
+    if not smoke:
+        tiered = dict(int8, active_proportion=1.0, tiers=2)
+        ndev = ndevs[-1]
+        for label, kw in ((f"tiered_dev{ndev}", {}),
+                          (f"tiered_async_dev{ndev}", {"schedule": "async"})):
+            rt = build_runtime(adapter, ds, dict(tiered),
+                               mesh=make_round_mesh(ndev), **kw)
+            timings = _steady_timings(rt, rounds)
+            _emit_variant(label, timings, _stage_bytes(rt, quantized=True))
+            assert rt.chain.verify()
+
 
 if __name__ == "__main__":
     import argparse

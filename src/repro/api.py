@@ -53,6 +53,7 @@ def build_runtime(
     stages: Optional[Dict[str, object]] = None,
     mesh=None,
     tiers: Optional[int] = None,
+    schedule: str = "sequential",
 ):
     """Builds the round runtime for a config.
 
@@ -79,7 +80,15 @@ def build_runtime(
     round over the S sub-aggregates before the chain commit — peak
     update-stack memory is bounded by the largest slice.  A ``validator``
     entry in ``stages`` selects the tier-1 (per-slice) inner validator;
-    ``tiers=1`` is the flat pipeline, bit-identical to omitting it."""
+    ``tiers=1`` is the flat pipeline, bit-identical to omitting it.
+
+    ``schedule="async"`` runs the same stage set under the asynchronous
+    pipelined engine (``repro.fl.async_engine``): cohort t+1's local
+    training is dispatched while cohort t's committee scoring / packing
+    still runs host-side, with ``jax.block_until_ready`` only at true
+    dependency edges.  Chain hashes and RoundLogs are bit-identical to
+    ``schedule="sequential"`` (parity-gated); with ``tiers=S`` the S
+    slices pipeline — slice s+1 trains while slice s sub-aggregates."""
     cfg = build_config(cfg, baseline=baseline)
     if tiers is not None:
         if isinstance(cfg, FLConfig):
@@ -93,7 +102,7 @@ def build_runtime(
     if isinstance(cfg, FLConfig):
         return FLTrainer(adapter, dataset, cfg,
                          initial_params=initial_params, stages=stages,
-                         mesh=mesh)
+                         mesh=mesh, schedule=schedule)
     return BFLCRuntime(adapter, dataset, cfg,
                        initial_params=initial_params, stages=stages,
-                       mesh=mesh)
+                       mesh=mesh, schedule=schedule)

@@ -47,7 +47,12 @@ class FLTrainer:
 
     def __init__(self, adapter: ModelAdapter, dataset: FederatedDataset,
                  cfg: FLConfig, initial_params=None,
-                 stages: Optional[Dict[str, object]] = None, mesh=None):
+                 stages: Optional[Dict[str, object]] = None, mesh=None,
+                 schedule: str = "sequential"):
+        if schedule not in ("sequential", "async"):
+            raise ValueError(
+                f"schedule={schedule!r} must be 'sequential' or 'async'"
+            )
         self.adapter = adapter
         self.data = dataset
         self.cfg = cfg
@@ -73,6 +78,11 @@ class FLTrainer:
         self.pipeline = build_pipeline(
             baseline_stage_names(cfg, mesh), stages, max_cohorts=1
         )
+        self.schedule = schedule
+        if schedule == "async":
+            from repro.fl.async_engine import AsyncRoundPipeline
+
+            self.pipeline = AsyncRoundPipeline.from_pipeline(self.pipeline)
         self.accuracies: List[float] = []
         self.stage_timings: List[Dict[str, float]] = []
         self._round = 0

@@ -92,6 +92,9 @@ class HierState:
     peak_stack_bytes: int = 0
     flat_stack_bytes: int = 0
     max_slice_rows: int = 0
+    # hier-validator slice bookkeeping between dispatch and finalize
+    saved_committee: Any = None
+    inner_split: bool = False
 
     def note_stack(self, nbytes: int) -> None:
         self.peak_stack_bytes = max(self.peak_stack_bytes, int(nbytes))
@@ -171,6 +174,16 @@ def sample_tiered(ctx: RoundContext) -> None:
                     if ctx.cohort < len(st.slices) else [])
 
 
+# async-engine scheduling contract (repro.fl.async_engine): the partition
+# is frozen at cohort 0, so slice s+1's trainer list depends only on the
+# sampler having run for slice s — NOT on slice s's validation — and
+# ``collected`` is shape-static (always the last slice).  That lets the
+# async executor prefetch-sample and train slice s+1 while slice s is
+# still being scored/sub-aggregated.  rng is drawn at cohort 0 only.
+sample_tiered.prefetch_safe = True
+sample_tiered.rng_first_only = True
+
+
 # ----------------------------------------------------------------------
 # tier-1 validator: per-slice committee consensus + sub-aggregation
 # ----------------------------------------------------------------------
@@ -237,11 +250,23 @@ class HierValidator:
         st.val_x2 = np.stack([p[0][0] for p in vpairs])
         st.val_y2 = np.stack([p[1][0] for p in vpairs])
 
-    def __call__(self, ctx: RoundContext) -> None:
+    # dispatch swaps in the slice sub-committee and runs the inner
+    # validator's prepare (which draws the slice's val batches) — the
+    # async engine's rng-edge chaining must order it with the host rng
+    # stream
+    dispatch_uses_rng = True
+
+    def dispatch(self, ctx: RoundContext) -> None:
+        """Open slice ``ctx.cohort``: swap in its sub-committee, reset the
+        slice-scoped dicts, run the inner validator's prepare + dispatch
+        (score program launched, result in flight).  Between dispatch and
+        finalize the async engine only runs trainer/sampler nodes, which
+        touch none of the slice-scoped state — validator nodes themselves
+        are serialized (finalize s before dispatch s+1)."""
         st = _require_hier(ctx, "hier validator")
         sl = st.slices[ctx.cohort]
         st.note_stack(_slice_stack_nbytes(ctx))
-        saved_committee = ctx.round_committee
+        st.saved_committee = ctx.round_committee
         ctx.round_committee = sl.committee
         ctx.score_table = {}
         ctx.updates = {}
@@ -252,20 +277,43 @@ class HierValidator:
             prep = getattr(inner, "prepare", None)
             if prep is not None:
                 prep(ctx)
-            inner(ctx)
+            inner_dispatch = getattr(inner, "dispatch", None)
+            st.inner_split = inner_dispatch is not None
+            if st.inner_split:
+                inner_dispatch(ctx)
+            else:
+                inner(ctx)                  # monolithic inner validator
+        except BaseException:
+            self._close_slice(ctx, st)
+            raise
+
+    def finalize(self, ctx: RoundContext) -> None:
+        st = _require_hier(ctx, "hier validator")
+        try:
+            if st.inner_split:
+                st.inner_validator.finalize(ctx)
             self._finish_slice(ctx, st)
         finally:
-            ctx.round_committee = saved_committee
-            # streaming ingest: drop every reference to this slice's
-            # update stack before the next slice lands — THE memory bound
-            ctx.updates = {}
-            ctx.cohort_updates = []
-            ctx.cohort_stacked = None
-            ctx.row_quant = {}
-            ctx.score_table = {}
+            self._close_slice(ctx, st)
         # the inner validator's k-updates trigger does not apply: a tiered
         # round ingests every slice exactly once
         ctx.collected = ctx.cohort >= len(st.slices) - 1
+
+    @staticmethod
+    def _close_slice(ctx: RoundContext, st: HierState) -> None:
+        ctx.round_committee = st.saved_committee
+        # streaming ingest: drop every reference to this slice's
+        # update stack before the next slice lands — THE memory bound
+        ctx.updates = {}
+        ctx.cohort_updates = []
+        ctx.cohort_stacked = None
+        ctx.cohort_scores = None
+        ctx.row_quant = {}
+        ctx.score_table = {}
+
+    def __call__(self, ctx: RoundContext) -> None:
+        self.dispatch(ctx)
+        self.finalize(ctx)
 
     def _finish_slice(self, ctx: RoundContext, st: HierState) -> None:
         cfg = ctx.cfg

@@ -107,12 +107,15 @@ class RoundContext:
     # chain-codec quantization, cached so the packer reuses the rows
     # instead of re-quantizing the packed stack
     row_quant: Dict[int, Any] = field(default_factory=dict)
-    # per-cohort state (overwritten each cohort)
+    # per-cohort state (overwritten each cohort; the async engine stages
+    # these between its cohort ring slots and the shared context)
     cohort: int = 0
     trainers: List[int] = field(default_factory=list)
     cohort_updates: List[Any] = field(default_factory=list)
     cohort_stacked: Any = None             # trainer's P-padded update stack
     cohort_poisoned: List[int] = field(default_factory=list)
+    cohort_scores: Any = None              # validator's (P, Q) score matrix
+    train_inflight: Any = None             # trainer's dispatched device stack
     # accumulated collection state
     trainers_total: List[int] = field(default_factory=list)
     updates: Dict[int, Any] = field(default_factory=dict)     # uploader -> update
@@ -234,6 +237,24 @@ def resolve(kind: str, impl) -> Stage:
     return registry[impl]
 
 
+def _sync_tree(ctx: RoundContext) -> list:
+    """Every ctx field a stage may leave as in-flight device work.
+
+    The sequential driver blocks on all of these after each stage so
+    BENCH_round buckets measure their own compute: ``cohort_stacked`` /
+    ``train_inflight`` catch the sharded trainer's async dispatch (which
+    used to bleed into the validate bucket), ``cohort_scores`` the
+    validator's score matrix, and a tiered round's ``sub_aggregates`` the
+    per-slice fused reductions.  The async engine deliberately does NOT
+    use this — it blocks only at true dependency edges."""
+    sync = [ctx.cohort_updates, ctx.cohort_stacked, ctx.train_inflight,
+            ctx.cohort_scores, ctx.packed_quantized, ctx.aggregate,
+            ctx.new_params]
+    if ctx.hier is not None:
+        sync.append(ctx.hier.sub_aggregates)
+    return sync
+
+
 # ----------------------------------------------------------------------
 # pipeline driver
 # ----------------------------------------------------------------------
@@ -262,8 +283,7 @@ class RoundPipeline:
         # jitted stages return asynchronously — block on the jax-carrying
         # ctx fields so each stage's compute lands in its own bucket
         # instead of bleeding into the next stage's first sync point
-        jax.block_until_ready((ctx.cohort_updates, ctx.packed_quantized,
-                               ctx.aggregate, ctx.new_params))
+        jax.block_until_ready(_sync_tree(ctx))
         ctx.timings[key] = ctx.timings.get(key, 0.0) + (time.perf_counter() - t0)
 
     def run(self, ctx: RoundContext) -> RoundContext:
@@ -273,6 +293,13 @@ class RoundPipeline:
             self._timed("validate", prepare, ctx)
         for cohort in range(self.max_cohorts):
             ctx.cohort = cohort
+            # rows quantized for an earlier cohort describe that cohort's
+            # updates — an uploader re-drawn later trains a NEW update, so
+            # a surviving cache entry would put a stale blob on the chain.
+            # The final cohort's cache still reaches the packer (no clear
+            # runs after ``collected``); a multi-cohort round's packer
+            # falls back to a fresh (bitwise-identical) re-quantize.
+            ctx.row_quant.clear()
             self._timed("sample", self.sampler, ctx)
             if not ctx.trainers:
                 break
@@ -425,16 +452,34 @@ def poison_cohort_updates(ctx: RoundContext, updates: List[Any]) -> List[int]:
     return poisoned
 
 
-@register("local_trainer", "local_sgd")
-def train_local_sgd(ctx: RoundContext) -> None:
+class LocalSGDTrainer:
     """(2) cohort-batched local SGD (one vmapped XLA program) + per-node
-    attack injection for malicious trainers."""
-    xs, ys = sample_cohort_batches(ctx)
-    stacked = ctx.local_train_fn(ctx.params, xs, ys)
-    updates = _unstack(stacked, len(ctx.trainers))
-    ctx.cohort_stacked = None              # single-device: no sharded stack
-    poison_cohort_updates(ctx, updates)
-    ctx.cohort_updates = updates
+    attack injection for malicious trainers.
+
+    Split into ``dispatch`` (host rng batch draws + async XLA launch into
+    ``ctx.train_inflight``) and ``finalize`` (unstack + attack injection)
+    so the async engine can overlap cohort t+1's device compute with
+    cohort t's host-side validate/pack work; ``__call__`` runs both
+    back-to-back — the sequential engine is unchanged, op for op."""
+
+    def dispatch(self, ctx: RoundContext) -> None:
+        xs, ys = sample_cohort_batches(ctx)
+        ctx.train_inflight = ctx.local_train_fn(ctx.params, xs, ys)
+        ctx.cohort_stacked = None          # single-device: no sharded stack
+
+    def finalize(self, ctx: RoundContext) -> None:
+        stacked = ctx.train_inflight
+        ctx.train_inflight = None
+        updates = _unstack(stacked, len(ctx.trainers))
+        poison_cohort_updates(ctx, updates)
+        ctx.cohort_updates = updates
+
+    def __call__(self, ctx: RoundContext) -> None:
+        self.dispatch(ctx)
+        self.finalize(ctx)
+
+
+train_local_sgd = register("local_trainer", "local_sgd")(LocalSGDTrainer())
 
 
 class CommitteeValidator:
@@ -443,9 +488,17 @@ class CommitteeValidator:
 
     ``prepare`` runs once per round: samples each member's validation
     batch and binds the (live) score table to the consensus object.
-    ``_honest_scores`` is the engine hook — subclasses swap in the
+    ``_scores_device`` is the engine hook — subclasses swap in the
     sharded / fused-int8 score programs (repro.fl.sharded) without
-    touching the consensus bookkeeping below."""
+    touching the consensus bookkeeping below.  ``dispatch`` launches the
+    score program asynchronously (device result parked in
+    ``ctx.cohort_scores``, no host rng consumed); ``finalize`` gathers it
+    and runs the collusion overlay + consensus admissions; ``__call__``
+    runs both back-to-back, so the sequential engine is unchanged."""
+
+    # dispatch consumes no host rng (pure device launch) — the async
+    # engine's rng-edge chaining reads this
+    dispatch_uses_rng = False
 
     def prepare(self, ctx: RoundContext) -> None:
         cfg, rng = ctx.cfg, ctx.rng
@@ -463,17 +516,21 @@ class CommitteeValidator:
         )
         ctx.consensus.bind_score_table(ctx.score_table)
 
-    def _honest_scores(self, ctx: RoundContext) -> np.ndarray:
-        """The (P, Q) accuracy matrix of this cohort's candidates."""
-        return np.asarray(
-            ctx.score_matrix_fn(
-                ctx.params, _stack(ctx.cohort_updates), ctx.val_x, ctx.val_y
-            )
+    def _scores_device(self, ctx: RoundContext):
+        """The (rows >= P, Q) accuracy matrix of this cohort's candidates,
+        as the score program's (possibly still in-flight) device result."""
+        return ctx.score_matrix_fn(
+            ctx.params, _stack(ctx.cohort_updates), ctx.val_x, ctx.val_y
         )
 
-    def __call__(self, ctx: RoundContext) -> None:
+    def dispatch(self, ctx: RoundContext) -> None:
+        ctx.cohort_scores = self._scores_device(ctx)
+
+    def finalize(self, ctx: RoundContext) -> None:
         cfg, rng = ctx.cfg, ctx.rng
-        honest_scores = self._honest_scores(ctx)        # (P, Q)
+        # gather + drop padding rows (sharded scorers return >= P rows)
+        honest_scores = np.asarray(ctx.cohort_scores)[: len(ctx.cohort_updates)]
+        ctx.cohort_scores = honest_scores               # (P, Q)
         for i, uploader in enumerate(ctx.trainers):
             row = {}
             for j, member in enumerate(ctx.round_committee):
@@ -496,6 +553,10 @@ class CommitteeValidator:
         # update per round whenever honest trainers < k.
         if len(ctx.consensus.accepted_records()) >= cfg.k_updates:
             ctx.collected = True
+
+    def __call__(self, ctx: RoundContext) -> None:
+        self.dispatch(ctx)
+        self.finalize(ctx)
 
 
 register("validator", "committee")(CommitteeValidator())
@@ -537,7 +598,7 @@ class Int8CommitteeValidator(CommitteeValidator):
     noise only (tolerance-bounded in tests), so it is not the default —
     the default stays bit-compatible with the f32 oracle."""
 
-    def _honest_scores(self, ctx: RoundContext) -> np.ndarray:
+    def _scores_device(self, ctx: RoundContext):
         if ctx.int8_score_fn is None:
             raise RuntimeError(
                 "committee_int8 needs ctx.int8_score_fn — build the runtime "
@@ -549,7 +610,7 @@ class Int8CommitteeValidator(CommitteeValidator):
             ctx.params, stack, ctx.val_x, ctx.val_y
         )
         cache_row_quant(ctx, q, s, int(stack.shape[1]))
-        return np.asarray(scores)
+        return scores
 
 
 register("validator", "committee_int8")(Int8CommitteeValidator())

@@ -112,7 +112,12 @@ class BFLCRuntime:
         initial_params=None,
         stages: Optional[Dict[str, object]] = None,
         mesh=None,
+        schedule: str = "sequential",
     ):
+        if schedule not in ("sequential", "async"):
+            raise ValueError(
+                f"schedule={schedule!r} must be 'sequential' or 'async'"
+            )
         if cfg.quantize_chain and not cfg.use_kernels:
             # the quantized chain path IS the fused Pallas engine; there is
             # no jnp fallback for it, so refuse the contradictory config
@@ -265,6 +270,14 @@ class BFLCRuntime:
             self.pipeline = build_pipeline(
                 default_stage_names(cfg, mesh), stages
             )
+        self.schedule = schedule
+        if schedule == "async":
+            # the async engine is a different *runner* over the same stage
+            # set: bit-identical products (parity-gated), overlapped
+            # execution (repro.fl.async_engine)
+            from repro.fl.async_engine import AsyncRoundPipeline
+
+            self.pipeline = AsyncRoundPipeline.from_pipeline(self.pipeline)
         self.logs: List[RoundLog] = []
         self.stage_timings: List[Dict[str, float]] = []
         # per-round hier memory accounting (tiers > 1): dicts with

@@ -56,6 +56,7 @@ import numpy as np
 from repro.core.aggregation import flatten_updates, normalize_weights
 from repro.fl.pipeline import (
     CommitteeValidator,
+    LocalSGDTrainer,
     RoundContext,
     _select_top_k,
     _set_packed,
@@ -104,28 +105,44 @@ def _pad_clients(xs: np.ndarray, ys: np.ndarray, ndev: int):
     return xs, ys, P
 
 
-@register("local_trainer", "local_sgd_sharded")
-def train_local_sgd_sharded(ctx: RoundContext) -> None:
+class ShardedLocalSGDTrainer(LocalSGDTrainer):
     """(2, sharded) cohort-batched local SGD, clients split over the mesh's
-    data axis; one shard_mapped XLA program per cohort shape."""
-    train_fn = _require(ctx, "sharded_train_fn", "local_sgd_sharded")
-    mesh = _require(ctx, "mesh", "local_sgd_sharded")
-    ndev = dict(mesh.shape).get("data", mesh.devices.size)
-    xs, ys = sample_cohort_batches(ctx)
-    xs, ys, n = _pad_clients(xs, ys, ndev)
-    stacked = train_fn(ctx.params, xs, ys)
-    # the P-sharded update stack (padded rows included) stays on its
-    # devices for the sharded validator — committee scoring consumes it
-    # with zero relayout.  The host copy below is still needed: poisoning,
-    # per-uploader bookkeeping (ctx.updates) and packing are host-side,
-    # and feeding the later single-device stages a device-committed
-    # P-sharded stack would make GSPMD replicate their compute per shard
-    # (observed: pack/aggregate re-sharding pathology before this gather).
-    ctx.cohort_stacked = stacked
-    host = jax.device_get(stacked)
-    updates = _unstack(host, n)             # padded rows never unstacked
-    poison_cohort_updates(ctx, updates)
-    ctx.cohort_updates = updates
+    data axis; one shard_mapped XLA program per cohort shape.  Same
+    dispatch/finalize split as ``LocalSGDTrainer``: ``dispatch`` draws the
+    batches and launches the shard_mapped program (result in flight on
+    ``ctx.train_inflight``); ``finalize`` pays the host transfer and
+    injects attacks."""
+
+    def dispatch(self, ctx: RoundContext) -> None:
+        train_fn = _require(ctx, "sharded_train_fn", "local_sgd_sharded")
+        mesh = _require(ctx, "mesh", "local_sgd_sharded")
+        ndev = dict(mesh.shape).get("data", mesh.devices.size)
+        xs, ys = sample_cohort_batches(ctx)
+        xs, ys, _ = _pad_clients(xs, ys, ndev)
+        stacked = train_fn(ctx.params, xs, ys)
+        # the P-sharded update stack (padded rows included) stays on its
+        # devices for the sharded validator — committee scoring consumes it
+        # with zero relayout.
+        ctx.cohort_stacked = stacked
+        ctx.train_inflight = stacked
+
+    def finalize(self, ctx: RoundContext) -> None:
+        # the host copy is still needed: poisoning, per-uploader
+        # bookkeeping (ctx.updates) and packing are host-side, and feeding
+        # the later single-device stages a device-committed P-sharded
+        # stack would make GSPMD replicate their compute per shard
+        # (observed: pack/aggregate re-sharding pathology before this
+        # gather).
+        host = jax.device_get(ctx.train_inflight)
+        ctx.train_inflight = None
+        updates = _unstack(host, len(ctx.trainers))  # padded rows dropped
+        poison_cohort_updates(ctx, updates)
+        ctx.cohort_updates = updates
+
+
+train_local_sgd_sharded = register("local_trainer", "local_sgd_sharded")(
+    ShardedLocalSGDTrainer()
+)
 
 
 def _pad_cached_to_shards(q, s, d: int, ndev: int):
@@ -186,7 +203,7 @@ class ShardedCommitteeValidator(CommitteeValidator):
     bookkeeping (collusion overlay, median acceptance, trigger) is
     inherited unchanged from ``CommitteeValidator``."""
 
-    def _honest_scores(self, ctx: RoundContext) -> np.ndarray:
+    def _scores_device(self, ctx: RoundContext):
         score_fn = _require(ctx, "sharded_score_fn", "committee_sharded")
         mesh = _require(ctx, "mesh", "committee_sharded")
         ndev = dict(mesh.shape).get("data", mesh.devices.size)
@@ -198,8 +215,7 @@ class ShardedCommitteeValidator(CommitteeValidator):
             stacked = ctx.cohort_stacked
         else:
             stacked = _pad_rows(_stack(ctx.cohort_updates), n, ndev)
-        scores = score_fn(ctx.params, stacked, ctx.val_x, ctx.val_y)
-        return np.asarray(scores)[:n]
+        return score_fn(ctx.params, stacked, ctx.val_x, ctx.val_y)
 
 
 register("validator", "committee_sharded")(ShardedCommitteeValidator())
@@ -213,7 +229,7 @@ class Int8ShardedCommitteeValidator(CommitteeValidator):
     the blob a quantizing packer would store, and the f32 (P, D) stack is
     materialized once, never twice."""
 
-    def _honest_scores(self, ctx: RoundContext) -> np.ndarray:
+    def _scores_device(self, ctx: RoundContext):
         score_fn = _require(
             ctx, "sharded_int8_score_fn", "committee_int8_sharded"
         )
@@ -234,7 +250,7 @@ class Int8ShardedCommitteeValidator(CommitteeValidator):
         d = int(sum(np.prod(l.shape[1:])
                     for l in jax.tree.leaves(stacked)))
         cache_row_quant(ctx, q, s, d)
-        return np.asarray(scores)[:n]
+        return scores
 
 
 register("validator", "committee_int8_sharded")(Int8ShardedCommitteeValidator())

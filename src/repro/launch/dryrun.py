@@ -194,7 +194,7 @@ def dryrun_one(
     pspecs = param_pspecs(cfg, params_shape, pol)
     param_shardings = named(mesh, pspecs)
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     try:
         if info["kind"] == "train":
             moment_dtype = (
@@ -311,7 +311,7 @@ def dryrun_one(
             lowered = jitted.lower(params_shape, tokens, position, cache, mrope)
 
         compiled = lowered.compile()
-        compile_s = time.time() - t0
+        compile_s = time.perf_counter() - t0
 
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()

@@ -61,20 +61,20 @@ def main():
             embed_mask=jnp.zeros((B, S), bool),
         )
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     logits, cache = prefill(params, batch)
     next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
-    print(f"prefill {B}x{S}: {time.time()-t0:.2f}s")
+    print(f"prefill {B}x{S}: {time.perf_counter()-t0:.2f}s")
 
     toks = [next_tok]
-    t0 = time.time()
+    t0 = time.perf_counter()
     for i in range(args.gen):
         pos = jnp.full((B,), S + i, jnp.int32)
         mrope = (jnp.broadcast_to(pos[None, :, None], (3, B, 1))
                  if cfg.rope == "mrope" else None)
         next_tok, logits, cache = decode(params, toks[-1], pos, cache, mrope)
         toks.append(next_tok)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     out = jnp.concatenate(toks, axis=1)
     print(f"decoded {args.gen} tokens x {B} reqs in {dt:.2f}s "
           f"({B*args.gen/dt:.1f} tok/s)")

@@ -88,7 +88,7 @@ def run_lm(args):
             loss_mask=jnp.ones((B, S), jnp.float32),
         )
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     for step in range(args.steps):
         batch = make_batch(args.batch, args.seq)
         val = make_batch(max(args.committee, 1), args.seq) \
@@ -96,7 +96,7 @@ def run_lm(args):
         state, metrics = jstep(state, batch, val)
         if (step + 1) % args.log_every == 0 or step == 0:
             print(f"step {step+1:4d}  loss {float(metrics['loss']):.4f}  "
-                  f"({(time.time()-t0)/(step+1):.2f}s/step)")
+                  f"({(time.perf_counter()-t0)/(step+1):.2f}s/step)")
     if args.ckpt:
         from repro.checkpoint import save_pytree
         save_pytree(args.ckpt, state.params)
