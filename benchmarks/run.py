@@ -36,6 +36,7 @@ from benchmarks import (
     kernel_bench,
     roofline,
     round_bench,
+    serve_bench,
     storage_opt,
     table1_accuracy,
 )
@@ -46,6 +47,7 @@ ALL = {
     "kernel_bench": kernel_bench.run,
     "round_bench": round_bench.run,
     "hier_bench": hier_bench.run,
+    "serve_bench": serve_bench.run,
     "storage_opt": storage_opt.run,
     "table1_accuracy": table1_accuracy.run,
     "fig4_malicious": fig4_malicious.run,
@@ -94,6 +96,14 @@ def main() -> None:
         data = json.loads(out.read_text()) if out.exists() else {}
         for section in ran:
             data.update(sections[section])
+        out.write_text(json.dumps(data, indent=2) + "\n")
+        print(f"# wrote {out}")
+    # serving rows live in their own snapshot: same merge discipline as
+    # BENCH_round.json so a --only run keeps unrelated rows intact
+    if "serve_bench" in sections:
+        out = root / "BENCH_serve.json"
+        data = json.loads(out.read_text()) if out.exists() else {}
+        data.update(sections["serve_bench"])
         out.write_text(json.dumps(data, indent=2) + "\n")
         print(f"# wrote {out}")
     if failures:

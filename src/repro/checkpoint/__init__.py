@@ -1,3 +1,13 @@
-from repro.checkpoint.ckpt import load_pytree, save_pytree
+from repro.checkpoint.ckpt import (
+    is_quantized_blob,
+    load_model_payload,
+    load_pytree,
+    save_pytree,
+)
 
-__all__ = ["load_pytree", "save_pytree"]
+__all__ = [
+    "is_quantized_blob",
+    "load_model_payload",
+    "load_pytree",
+    "save_pytree",
+]

@@ -57,6 +57,33 @@ def load_pytree(path: str, like: Any = None) -> Any:
     return _rebuild(payload[b"structure"], iter(leaves))
 
 
+def is_quantized_blob(tree: Any) -> bool:
+    """True for an ``Int8UpdateCodec`` chain blob ({"q", "scales", "d"})."""
+    return (
+        isinstance(tree, dict)
+        and set(tree.keys()) == {"q", "scales", "d"}
+        and not isinstance(tree["d"], dict)
+    )
+
+
+def load_model_payload(path: str, codec: Any = None) -> Any:
+    """Load a chain model snapshot: a raw parameter pytree, or — when the
+    snapshot is an int8-codec chain blob and a codec is supplied — the
+    decoded pytree.  The serving hot-swap path restores through here."""
+    tree = load_pytree(path)
+    if is_quantized_blob(tree):
+        if codec is None:
+            raise ValueError(
+                f"{path} holds an int8 chain blob; pass the chain's "
+                "Int8UpdateCodec to decode it"
+            )
+        # msgpack round-trips python ints as 0-d arrays; the dequantize
+        # slice bound must be a concrete int
+        tree = dict(tree, d=int(tree["d"]))
+        return codec.decode(tree)
+    return tree
+
+
 def _structure_of(tree):
     """Serializable skeleton (dicts/lists/tuples/None markers).
 

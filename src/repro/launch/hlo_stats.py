@@ -276,6 +276,25 @@ def hlo_compute_stats(hlo_text: str) -> Dict[str, int]:
     return {"dot_flops": f, "dot_bytes": b}
 
 
+def decode_per_token_stats(hlo_text: str, batch: int) -> Dict[str, float]:
+    """Modeled cost of ONE decoded token from a decode-step program.
+
+    A decode step advances every sequence in the batch by exactly one token,
+    so per-token cost is the program total divided by the batch — the
+    serving analogue of the round kernels' modeled-bytes rows.  Feeding a
+    prefill/train program in gives per-*step-row* numbers, which is not the
+    same thing; only use decode-step HLO here."""
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    comp = hlo_compute_stats(hlo_text)
+    coll = collective_stats(hlo_text)
+    return {
+        "dot_flops_per_token": comp["dot_flops"] / batch,
+        "dot_bytes_per_token": comp["dot_bytes"] / batch,
+        "collective_bytes_per_token": coll.total_bytes / batch,
+    }
+
+
 def roofline_terms(
     *,
     flops: float,

@@ -1,17 +1,21 @@
-"""Batched serving driver: prefill a batch of requests, then decode tokens
-with the same sharded decode step the dry-run compiles.
+"""Serving CLI: continuous-batching engine (default) or the static-batch
+baseline over the same compiled prefill/decode steps.
 
   PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --smoke \
-      --batch 4 --prompt-len 64 --gen 32
+      --slots 4 --requests 16 --rate 20 --max-len 96
+
+``--static`` switches the admission policy to the legacy whole-batch
+barrier (all requests of a batch start and finish together) — the baseline
+``BENCH_serve.json`` compares against.  The heavy lifting lives in
+``repro.serve``; this module only parses flags, builds the trace, and
+prints the measured metrics.
 """
 from __future__ import annotations
 
 import argparse
-import time
+import json
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 
 def main():
@@ -19,66 +23,53 @@ def main():
     ap.add_argument("--arch", default="olmo-1b")
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced smoke config (CPU-friendly)")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode-batch slot capacity")
+    ap.add_argument("--max-len", type=int, default=96,
+                    help="KV cache length (prompt + generation budget)")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=20.0,
+                    help="Poisson arrival rate (requests/s)")
+    ap.add_argument("--prompt-lens", type=int, nargs="+",
+                    default=[16, 32, 48, 64])
+    ap.add_argument("--gen-lens", type=int, nargs="+", default=[8, 16, 32])
+    ap.add_argument("--static", action="store_true",
+                    help="static-batch baseline admission policy")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     from repro.configs import registry
-    from repro.launch.mesh import make_host_mesh
-    from repro.launch.shardings import ShardingPolicy
-    from repro.launch.steps import make_decode_step, make_prefill_step
-    from repro.models import init_model
-    from repro.models.transformer import Batch
+    from repro.serve import ServeEngine, make_poisson_trace
 
     cfg = (registry.smoke_config(args.arch) if args.smoke
            else registry.get_config(args.arch))
     if not cfg.is_decoder():
         raise SystemExit(f"{args.arch} is encoder-only: no decode step")
-    mesh = make_host_mesh(1, 1)
-    pol = ShardingPolicy(dp_axes=("data",), dp_sizes=(1,), model_axis_size=1, fsdp=False)
+    need = max(args.prompt_lens) + max(args.gen_lens) - 1
+    if need > args.max_len:
+        raise SystemExit(
+            f"--max-len {args.max_len} too small for prompt+gen {need}")
+
+    from repro.models import init_model
 
     params = init_model(jax.random.PRNGKey(0), cfg)
-    max_len = args.prompt_len + args.gen
-    prefill = jax.jit(make_prefill_step(cfg, mesh, pol, max_len=max_len))
-    decode = jax.jit(make_decode_step(cfg, mesh, pol))
-
-    rng = np.random.default_rng(0)
-    B, S = args.batch, args.prompt_len
-    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
-    batch = Batch(
-        tokens=prompts,
-        positions=jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S)),
-        targets=jnp.zeros((B, S), jnp.int32),
-        loss_mask=jnp.ones((B, S), jnp.float32),
+    engine = ServeEngine(cfg, params, num_slots=args.slots,
+                         max_len=args.max_len)
+    trace = make_poisson_trace(
+        num_requests=args.requests, rate=args.rate,
+        prompt_lens=args.prompt_lens, gen_lens=args.gen_lens,
+        vocab_size=cfg.vocab_size, seed=args.seed,
     )
-    if cfg.rope == "mrope":
-        batch = batch._replace(
-            positions=jnp.broadcast_to(
-                jnp.arange(S, dtype=jnp.int32)[None, None], (3, B, S)
-            ),
-            embeds=jnp.zeros((B, S, cfg.d_model), jnp.dtype(cfg.dtype)),
-            embed_mask=jnp.zeros((B, S), bool),
-        )
+    engine.warmup(args.prompt_lens)
 
-    t0 = time.perf_counter()
-    logits, cache = prefill(params, batch)
-    next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
-    print(f"prefill {B}x{S}: {time.perf_counter()-t0:.2f}s")
-
-    toks = [next_tok]
-    t0 = time.perf_counter()
-    for i in range(args.gen):
-        pos = jnp.full((B,), S + i, jnp.int32)
-        mrope = (jnp.broadcast_to(pos[None, :, None], (3, B, 1))
-                 if cfg.rope == "mrope" else None)
-        next_tok, logits, cache = decode(params, toks[-1], pos, cache, mrope)
-        toks.append(next_tok)
-    dt = time.perf_counter() - t0
-    out = jnp.concatenate(toks, axis=1)
-    print(f"decoded {args.gen} tokens x {B} reqs in {dt:.2f}s "
-          f"({B*args.gen/dt:.1f} tok/s)")
-    print("sample token ids:", np.asarray(out[0])[:16])
+    policy = "static" if args.static else "continuous"
+    report = engine.run(trace, policy=policy)
+    m = report.metrics()
+    print(f"# {policy} serving, {args.arch}"
+          f"{' (smoke)' if args.smoke else ''}, slots={args.slots}")
+    print(json.dumps(m, indent=2))
+    sample = report.results[0]
+    print("sample token ids:", sample.tokens[:16])
 
 
 if __name__ == "__main__":

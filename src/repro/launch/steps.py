@@ -216,7 +216,16 @@ def make_prefill_step(cfg: ModelConfig, mesh, pol: ShardingPolicy,
 
 
 def make_decode_step(cfg: ModelConfig, mesh, pol: ShardingPolicy,
-                     *, batch_sharded: bool = True):
+                     *, batch_sharded: bool = True,
+                     return_logits: bool = True):
+    """One greedy decode step.
+
+    ``return_logits=False`` drops the (B, 1, V) logits from the outputs —
+    the serving hot loop only needs the argmax token, and materializing /
+    transferring full logits every tick is pure overhead (the continuous
+    engine jits this with the token/position/cache buffers donated, so the
+    step updates the KV cache in place).
+    """
     ctx = make_moe_ctx(cfg, mesh, pol, batch_sharded=batch_sharded)
 
     def serve_step(params, tokens, position, cache,
@@ -226,6 +235,8 @@ def make_decode_step(cfg: ModelConfig, mesh, pol: ShardingPolicy,
             mrope_position=mrope_position,
         )
         next_token = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
-        return next_token[:, None], logits, new_cache
+        if return_logits:
+            return next_token[:, None], logits, new_cache
+        return next_token[:, None], new_cache
 
     return serve_step

@@ -61,3 +61,28 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
         init_layer_cache(cfg, spec, batch, max_len, dtype) for spec in cfg.tail
     )
     return {"units": stacked, "tail": tail}
+
+
+def insert_slot_cache(cache: dict, slot_cache: dict, b) -> dict:
+    """Write a batch-1 cache (one request, e.g. fresh from prefill) into batch
+    row ``b`` of a batched decode cache.
+
+    This is the continuous-batching admission primitive: a finished slot's
+    rows are overwritten in place by the next request's prefilled KV state,
+    with no barrier on the other slots.  ``b`` may be a traced int32 scalar,
+    so one jitted insert serves every slot.  Unit leaves carry the stacked
+    ``(num_units, B, ...)`` layout (batch axis 1); tail leaves are plain
+    ``(B, ...)`` (batch axis 0).
+    """
+
+    def ins(axis):
+        def f(big, small):
+            return jax.lax.dynamic_update_slice_in_dim(
+                big, small.astype(big.dtype), b, axis
+            )
+        return f
+
+    return {
+        "units": jax.tree.map(ins(1), cache["units"], slot_cache["units"]),
+        "tail": jax.tree.map(ins(0), cache["tail"], slot_cache["tail"]),
+    }

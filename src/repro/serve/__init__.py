@@ -1,0 +1,22 @@
+"""Continuous-batching inference serving off the latest chain model."""
+from repro.serve.engine import ServeEngine, ServeReport, VirtualClock, WallClock
+from repro.serve.params import ChainParamSource, CheckpointParamSource, checkpoint_name
+from repro.serve.scheduler import FifoScheduler
+from repro.serve.slots import Request, RequestResult, SlotTable
+from repro.serve.trace import aggregate, make_poisson_trace
+
+__all__ = [
+    "ChainParamSource",
+    "CheckpointParamSource",
+    "FifoScheduler",
+    "Request",
+    "RequestResult",
+    "ServeEngine",
+    "ServeReport",
+    "SlotTable",
+    "VirtualClock",
+    "WallClock",
+    "aggregate",
+    "checkpoint_name",
+    "make_poisson_trace",
+]

@@ -1,0 +1,80 @@
+"""Hot-swap parameter sources: where the serving engine gets fresh weights.
+
+BFLC stores the global model on-chain (paper §III.A), so a serving node can
+always read the latest committee-approved parameters.  The engine polls a
+``ParamSource`` at tick boundaries and swaps the whole parameter pytree in
+one reference assignment — in-flight requests keep their KV caches and
+continue decoding under the new weights (no drain, no drop).
+
+Two sources:
+
+* ``ChainParamSource``      — watches a live ``repro.core.blockchain.Chain``
+  (the in-process round loop commits model blocks as training progresses).
+* ``CheckpointParamSource`` — watches a directory for
+  ``model_round_<t>.msgpack`` snapshots written via ``repro.checkpoint``
+  (a serving node separate from the trainer).  Snapshots may hold the raw
+  f32 pytree or an int8-codec chain blob; blobs are decoded through the
+  chain's ``Int8UpdateCodec``.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Optional, Tuple
+
+from repro.checkpoint import load_model_payload
+
+CKPT_RE = re.compile(r"^model_round_(\d+)\.msgpack$")
+
+
+def checkpoint_name(round_t: int) -> str:
+    return f"model_round_{round_t}.msgpack"
+
+
+class ChainParamSource:
+    """Poll a live chain for a newer model block (O(1) latest-model read)."""
+
+    def __init__(self, chain):
+        self.chain = chain
+        self._seen = chain.current_round
+
+    def poll(self) -> Optional[Tuple[int, Any]]:
+        r = self.chain.current_round
+        if r <= self._seen:
+            return None
+        self._seen = r
+        round_t, model = self.chain.latest_model()
+        return round_t, model
+
+    @property
+    def version(self) -> int:
+        return self._seen
+
+
+class CheckpointParamSource:
+    """Poll a snapshot directory for a newer ``model_round_<t>.msgpack``."""
+
+    def __init__(self, directory: str, codec=None, start_round: int = -1):
+        self.directory = directory
+        self.codec = codec
+        self._seen = start_round
+
+    def _latest_on_disk(self) -> Optional[int]:
+        try:
+            names = os.listdir(self.directory)
+        except FileNotFoundError:
+            return None
+        rounds = [int(m.group(1)) for n in names if (m := CKPT_RE.match(n))]
+        return max(rounds) if rounds else None
+
+    def poll(self) -> Optional[Tuple[int, Any]]:
+        latest = self._latest_on_disk()
+        if latest is None or latest <= self._seen:
+            return None
+        self._seen = latest
+        path = os.path.join(self.directory, checkpoint_name(latest))
+        return latest, load_model_payload(path, codec=self.codec)
+
+    @property
+    def version(self) -> int:
+        return self._seen

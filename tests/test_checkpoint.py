@@ -1,0 +1,145 @@
+"""Checkpoint round-trips for chain model blocks.
+
+``save_pytree``/``load_pytree`` carry three kinds of chain payloads:
+raw f32 parameter pytrees, bf16-cast leaves, and int8-codec blobs
+({"q", "scales", "d"}).  Serving restores through ``load_model_payload``,
+which must hand back exactly what the trainer committed — dtype and bits.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import (
+    is_quantized_blob,
+    load_model_payload,
+    load_pytree,
+    save_pytree,
+)
+from repro.configs import registry
+from repro.kernels.ops import Int8UpdateCodec
+from repro.models import init_model
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return registry.get_config(
+        "olmo-1b", d_model=32, num_units=2, num_heads=2, num_kv_heads=2,
+        d_ff=64, vocab_size=128,
+    )
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_model(jax.random.PRNGKey(0), cfg)
+
+
+def assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert np.asarray(x).dtype == np.asarray(y).dtype
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_f32_params_roundtrip_structure_rebuild(params, tmp_path):
+    p = str(tmp_path / "m.msgpack")
+    save_pytree(p, params)
+    got = load_pytree(p)
+    assert jax.tree.structure(got) == jax.tree.structure(params)
+    assert_trees_equal(got, params)
+
+
+def test_f32_params_roundtrip_like(params, tmp_path):
+    p = str(tmp_path / "m.msgpack")
+    save_pytree(p, params)
+    got = load_pytree(p, like=params)
+    assert_trees_equal(got, params)
+
+
+def test_bf16_leaves_roundtrip(params, tmp_path):
+    half = jax.tree.map(lambda x: jnp.asarray(x, jnp.bfloat16), params)
+    p = str(tmp_path / "bf16.msgpack")
+    save_pytree(p, half)
+    got = load_pytree(p)
+    for x, y in zip(jax.tree.leaves(got), jax.tree.leaves(half)):
+        assert x.dtype == jnp.bfloat16
+        np.testing.assert_array_equal(
+            np.asarray(x, np.float32), np.asarray(y, np.float32))
+
+
+def test_int8_blob_roundtrip_preserves_dtypes(params, tmp_path):
+    codec = Int8UpdateCodec(params)
+    blob = codec.encode(jax.tree.map(lambda x: x * 0.5, params))
+    assert is_quantized_blob(blob)
+    p = str(tmp_path / "blob.msgpack")
+    save_pytree(p, blob)
+    got = load_pytree(p)
+    assert is_quantized_blob(got)
+    assert np.asarray(got["q"]).dtype == np.int8
+    np.testing.assert_array_equal(np.asarray(got["q"]), np.asarray(blob["q"]))
+    np.testing.assert_array_equal(
+        np.asarray(got["scales"]), np.asarray(blob["scales"]))
+    assert int(got["d"]) == int(blob["d"])
+
+
+def test_tiered_layout_roundtrip(tmp_path):
+    """Nested dict/tuple/list/None skeleton — the tiered chain record
+    shapes (committee snapshots, per-tier aggregates) survive rebuild."""
+    payload = {
+        "tiers": (
+            {"members": np.arange(5, dtype=np.int32),
+             "scores": np.linspace(0, 1, 6, dtype=np.float32).reshape(2, 3)},
+            {"members": np.arange(3, dtype=np.int32),
+             "scores": None},
+        ),
+        "meta": [np.asarray(7, np.int64), None],
+        "accept": np.asarray([True, False, True]),
+    }
+    p = str(tmp_path / "tier.msgpack")
+    save_pytree(p, payload)
+    got = load_pytree(p)
+    assert isinstance(got["tiers"], tuple) and len(got["tiers"]) == 2
+    assert got["tiers"][1]["scores"] is None
+    assert isinstance(got["meta"], list) and got["meta"][1] is None
+    np.testing.assert_array_equal(
+        np.asarray(got["tiers"][0]["scores"]), payload["tiers"][0]["scores"])
+    np.testing.assert_array_equal(
+        np.asarray(got["accept"]), payload["accept"])
+    assert int(got["meta"][0]) == 7
+
+
+def test_load_model_payload_raw(params, tmp_path):
+    p = str(tmp_path / "raw.msgpack")
+    save_pytree(p, params)
+    got = load_model_payload(p)
+    assert_trees_equal(got, params)
+
+
+def test_load_model_payload_blob_decodes(params, tmp_path):
+    codec = Int8UpdateCodec(params)
+    update = jax.tree.map(lambda x: x + 0.25, params)
+    blob = codec.encode(update)
+    p = str(tmp_path / "blob.msgpack")
+    save_pytree(p, blob)
+    got = load_model_payload(p, codec=codec)
+    # decoded-from-disk must be bit-identical to decoded-from-memory
+    assert_trees_equal(got, codec.decode(blob))
+    assert jax.tree.structure(got) == jax.tree.structure(params)
+
+
+def test_load_model_payload_blob_requires_codec(params, tmp_path):
+    blob = Int8UpdateCodec(params).encode(params)
+    p = str(tmp_path / "blob.msgpack")
+    save_pytree(p, blob)
+    with pytest.raises(ValueError, match="int8 chain blob"):
+        load_model_payload(p)
+
+
+def test_is_quantized_blob_rejects_lookalikes(params):
+    assert not is_quantized_blob(params)
+    assert not is_quantized_blob({"q": 1, "scales": 2})
+    # a params tree whose top-level keys collide but whose "d" is a subtree
+    nested = {"q": np.zeros(2), "scales": np.zeros(2), "d": {"w": np.zeros(2)}}
+    assert not is_quantized_blob(nested)

@@ -59,6 +59,28 @@ ENTRY %main (a: f32[4,4]) -> f32[4,4] {
     assert stats.bytes_by_kind["all-gather"] == 4 * 8 * 4
 
 
+def test_decode_per_token_stats_divides_by_batch():
+    # SYNTH totals: dot flops 2048 + 40960; dot bytes 1280 + 3584*5 = 19200;
+    # collective bytes 512 + 10240 = 10752.  A decode step advances every
+    # batch row by one token, so per-token = total / batch.
+    pt = H.decode_per_token_stats(SYNTH, 4)
+    assert pt["dot_flops_per_token"] == pytest.approx((2048 + 40960) / 4)
+    assert pt["dot_bytes_per_token"] == pytest.approx(19200 / 4)
+    assert pt["collective_bytes_per_token"] == pytest.approx(10752 / 4)
+
+
+def test_decode_per_token_stats_batch_one_is_totals():
+    pt = H.decode_per_token_stats(SYNTH, 1)
+    s = H.hlo_compute_stats(SYNTH)
+    assert pt["dot_flops_per_token"] == s["dot_flops"]
+    assert pt["dot_bytes_per_token"] == s["dot_bytes"]
+
+
+def test_decode_per_token_stats_rejects_bad_batch():
+    with pytest.raises(ValueError, match="batch must be >= 1"):
+        H.decode_per_token_stats(SYNTH, 0)
+
+
 def test_roofline_terms_dominance():
     t = H.roofline_terms(
         flops=197e12, bytes_accessed=819e9, collective_bytes=100e9, chips=1
